@@ -1,0 +1,102 @@
+"""Table II reproduction: end-to-end pipelined FeatureBox vs the staged
+(MapReduce-style, materialize-every-stage) baseline on synthetic ads logs.
+
+Reports wall time, speedup, and intermediate I/O bytes eliminated — the
+paper's headline quantities (5.14x/10.19x, 50-100TB saved), at laptop scale.
+"""
+
+from __future__ import annotations
+
+import tempfile
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import PipelinedRunner, StagedRunner, build_schedule, compile_layers
+from repro.fe.datagen import gen_views
+from repro.fe.pipeline_graph import N_DENSE_FEATS, N_SPARSE_FIELDS, build_fe_graph
+from repro.models.common import sigmoid_bce
+from repro.train.optimizer import adamw
+
+TABLE = 32 * 1024
+DIM = 16
+
+
+def _model(key):
+    d_in = N_DENSE_FEATS + N_SPARSE_FIELDS * DIM + DIM
+    return {
+        "embed": jax.random.normal(key, (TABLE, DIM)) * 0.05,
+        "w1": jax.random.normal(jax.random.fold_in(key, 1), (d_in, 64)) * 0.05,
+        "b1": jnp.zeros(64),
+        "w2": jax.random.normal(jax.random.fold_in(key, 2), (64, 1)) * 0.05,
+        "b2": jnp.zeros(1),
+    }
+
+
+def _make_train_step():
+    opt = adamw(1e-2)
+
+    def forward(p, env):
+        sp = env["batch_sparse"] % TABLE
+        emb = jnp.take(p["embed"], sp, axis=0).reshape(sp.shape[0], -1)
+        seq = jnp.take(p["embed"], env["batch_seq_ids"] % TABLE, axis=0)
+        seq = (seq * env["batch_seq_mask"][..., None]).sum(1)
+        x = jnp.concatenate([env["batch_dense"], emb, seq], axis=1)
+        h = jax.nn.relu(x @ p["w1"] + p["b1"])
+        return (h @ p["w2"] + p["b2"])[:, 0]
+
+    @jax.jit
+    def jit_step(p, s, dense, sparse, seq_ids, seq_mask, label):
+        env = {"batch_dense": dense, "batch_sparse": sparse,
+               "batch_seq_ids": seq_ids, "batch_seq_mask": seq_mask}
+        loss, g = jax.value_and_grad(
+            lambda p: sigmoid_bce(forward(p, env), label).mean())(p)
+        p, s = opt.update(p, g, s)
+        return p, s, loss
+
+    def step(state, env):
+        p, s, loss = jit_step(state["p"], state["s"], env["batch_dense"],
+                              jnp.asarray(np.asarray(env["batch_sparse"])),
+                              jnp.asarray(np.asarray(env["batch_seq_ids"])),
+                              jnp.asarray(np.asarray(env["batch_seq_mask"])),
+                              jnp.asarray(np.asarray(env["batch_label"])))
+        return {"p": p, "s": s, "loss": float(loss)}
+
+    return step, opt
+
+
+def run(n_batches: int = 8, rows: int = 2048) -> List[Dict]:
+    layers = compile_layers(build_schedule(build_fe_graph()))
+    batches = [gen_views(rows, seed=10 + i) for i in range(n_batches)]
+    key = jax.random.PRNGKey(0)
+
+    step, opt = _make_train_step()
+    params = _model(key)
+    state = {"p": params, "s": opt.init(params)}
+    pipe = PipelinedRunner(layers, step, prefetch=2)
+    pipe.run(dict(state), [dict(b) for b in batches])  # includes warmup trace
+
+    t0 = time.perf_counter()
+    pipe2 = PipelinedRunner(layers, step, prefetch=2)
+    pipe2.run(dict(state), [dict(b) for b in batches])
+    t_pipe = time.perf_counter() - t0
+
+    staged = StagedRunner(layers, step, workdir=tempfile.mkdtemp())
+    t0 = time.perf_counter()
+    staged.run(dict(state), [dict(b) for b in batches])
+    t_staged = time.perf_counter() - t0
+
+    return [
+        {"name": "e2e_featurebox_pipelined", "us_per_call": t_pipe / n_batches * 1e6,
+         "derived": f"wall={t_pipe:.2f}s intermediate_io=0B "
+                    f"fe={pipe2.stats.fe_seconds:.2f}s train={pipe2.stats.train_seconds:.2f}s"},
+        {"name": "e2e_staged_baseline", "us_per_call": t_staged / n_batches * 1e6,
+         "derived": f"wall={t_staged:.2f}s "
+                    f"intermediate_io={staged.stats.intermediate_bytes/2**20:.1f}MiB"},
+        {"name": "e2e_speedup", "us_per_call": 0.0,
+         "derived": f"{t_staged/t_pipe:.2f}x faster, "
+                    f"{staged.stats.intermediate_bytes/2**20:.1f}MiB intermediate I/O eliminated"},
+    ]

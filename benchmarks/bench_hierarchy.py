@@ -1,0 +1,56 @@
+"""Hierarchical parameter server tier behavior (paper §II-B, [37]).
+
+The HBM←DRAM←SSD design rests on two empirical properties of ads traffic:
+(1) per-batch working sets are small (dedup), and (2) row popularity is
+Zipf-like, so a DRAM cache absorbs most SSD reads. This benchmark drives the
+actual `HierarchicalPS` with Zipf(1.05) id traffic and reports working-set
+ratios, host-cache hit rates vs cache size, and pull/push throughput.
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.embedding.hierarchy import HierarchicalPS
+
+ROWS = 500_000
+DIM = 32
+BATCH = 8192
+STEPS = 30
+
+
+def run() -> List[Dict]:
+    rng = np.random.default_rng(0)
+    out: List[Dict] = []
+
+    # working-set ratio under Zipf traffic (the dedup claim)
+    zipf = rng.zipf(1.05, size=BATCH * 26) % ROWS
+    uniq_ratio = len(np.unique(zipf)) / zipf.size
+    out.append({"name": "ps_working_set_ratio", "us_per_call": 0.0,
+                "derived": f"unique/total={uniq_ratio:.3f} "
+                           f"(batch {BATCH}x26 Zipf1.05 over {ROWS} rows)"})
+
+    for cache_rows in (1_000, 20_000, 100_000):
+        ps = HierarchicalPS(os.path.join(tempfile.mkdtemp(), "t.bin"),
+                            total_rows=ROWS, dim=DIM,
+                            host_cache_rows=cache_rows)
+        t0 = time.perf_counter()
+        for step in range(STEPS):
+            ids = rng.zipf(1.05, size=BATCH) % ROWS
+            w, uniq, inv = ps.pull(ids)
+            ps.push(uniq, w)  # write-through (worst case)
+        dt = time.perf_counter() - t0
+        total = ps.stats.host_hits + ps.stats.ssd_reads
+        out.append({
+            "name": f"ps_cache_{cache_rows}rows",
+            "us_per_call": dt / STEPS * 1e6,
+            "derived": (f"host_hit_rate={ps.stats.host_hits/total:.2f} "
+                        f"ssd_reads/step={ps.stats.ssd_reads//STEPS} "
+                        f"pulled_rows/step={ps.stats.pulled_rows//STEPS}"),
+        })
+    return out

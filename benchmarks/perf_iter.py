@@ -1,0 +1,68 @@
+"""Perf-iteration runner (§Perf): run one (arch x shape x variant) cell and
+diff its roofline terms against the recorded baseline.
+
+  PYTHONPATH=src python -m benchmarks.perf_iter --arch deepseek-v2-236b \
+      --shape train_4k --variant accum4 [--multi-pod]
+
+Appends every run to results/perf_iters.jsonl so the hypothesis -> change ->
+before/after log in EXPERIMENTS.md §Perf is reproducible.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", default="base")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--baseline", default="results/dryrun_all.json")
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import run_cell
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    from benchmarks.roofline import analyze_record
+
+    rec = run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
+                   variant=args.variant, verbose=True)
+    row = analyze_record(rec)
+    if row is None:
+        print("cell skipped or failed"); sys.exit(1)
+
+    base = None
+    if os.path.exists(args.baseline):
+        with open(args.baseline) as f:
+            for r in json.load(f):
+                if (r["arch"], r["shape"], r["mesh"], r.get("variant")) == (
+                        args.arch, args.shape, rec["mesh"], "base"):
+                    base = analyze_record(r)
+                    break
+
+    def fmt(r):
+        return (f"compute={r['compute_s']:.3e}s memory={r['memory_s']:.3e}s "
+                f"collective={r['collective_s']:.3e}s dom={r['dominant']} "
+                f"frac={r['roofline_fraction']:.4f} hbm={r['hbm_peak_gib']:.1f}GiB")
+
+    print(f"\nVARIANT {args.variant}: {fmt(row)}")
+    if base:
+        print(f"BASELINE base     : {fmt(base)}")
+        for t in ("compute_s", "memory_s", "collective_s"):
+            if base[t] > 0:
+                print(f"  {t}: {base[t]:.3e} -> {row[t]:.3e} "
+                      f"({(row[t]/base[t]-1)*100:+.1f}%)")
+        print(f"  roofline_fraction: {base['roofline_fraction']:.4f} -> "
+              f"{row['roofline_fraction']:.4f}")
+
+    os.makedirs("results", exist_ok=True)
+    with open("results/perf_iters.jsonl", "a") as f:
+        f.write(json.dumps({"record": rec, "analysis": row}) + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Benchmark harness: one module per paper table/figure + roofline.
+
+Prints ``name,us_per_call,derived`` CSV (one row per measurement).
+
+  PYTHONPATH=src python -m benchmarks.run             # all
+  PYTHONPATH=src python -m benchmarks.run --only e2e  # substring filter
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="", help="substring filter on suite name")
+    args = ap.parse_args()
+
+    from benchmarks import bench_end_to_end, bench_feature_extraction, \
+        bench_hierarchy, bench_launch_overhead, roofline
+
+    suites = [
+        ("launch_overhead(TableI)", bench_launch_overhead.run),
+        ("feature_extraction(Fig6)", bench_feature_extraction.run),
+        ("end_to_end(TableII)", bench_end_to_end.run),
+        ("hierarchy(PS tiers)", bench_hierarchy.run),
+        ("roofline", roofline.run),
+    ]
+    print("name,us_per_call,derived")
+    failed = 0
+    for name, fn in suites:
+        if args.only and args.only not in name:
+            continue
+        try:
+            for row in fn():
+                derived = str(row.get("derived", "")).replace(",", ";")
+                print(f"{row['name']},{row['us_per_call']:.2f},{derived}")
+        except Exception:
+            failed += 1
+            traceback.print_exc()
+            print(f"{name},NaN,SUITE FAILED")
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

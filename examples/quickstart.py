@@ -1,0 +1,77 @@
+"""Quickstart: the FeatureBox pipeline in ~60 lines.
+
+Generates raw ads views, builds the FE operator graph, schedules it into
+layers (host/device placement + per-layer meta-kernels), runs one batch
+through the pipeline, and trains a tiny CTR model on the output.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import build_schedule, compile_layers, run_layers
+from repro.fe.datagen import gen_views
+from repro.fe.pipeline_graph import N_DENSE_FEATS, N_SPARSE_FIELDS, build_fe_graph
+from repro.models.common import sigmoid_bce
+from repro.train.optimizer import adamw
+
+# 1. raw logs: three views + materialized basic features ------------------
+views = gen_views(n_instances=2048, seed=0)
+
+# 2. the FE operator graph, scheduled layer-wise ---------------------------
+graph = build_fe_graph()
+schedule = build_schedule(graph)
+print(f"schedule: {schedule.n_layers} layers, "
+      f"{schedule.n_device_dispatches} fused device dispatches "
+      f"(vs {schedule.n_unfused_dispatches} unfused)")
+layers = compile_layers(schedule)
+
+# 3. run the pipeline: views -> training batch -----------------------------
+env = run_layers(layers, dict(views))
+batch = {k: env[k] for k in
+         ("batch_dense", "batch_sparse", "batch_seq_ids", "batch_seq_mask",
+          "batch_label")}
+print("batch:", {k: tuple(v.shape) for k, v in batch.items()})
+
+# 4. a tiny CTR model over the extracted features --------------------------
+FIELD = 1 << 20
+key = jax.random.PRNGKey(0)
+params = {
+    "embed": jax.random.normal(key, (64 * 1024, 16)) * 0.05,  # hashed-down table
+    "w1": jax.random.normal(jax.random.fold_in(key, 1),
+                            (N_DENSE_FEATS + N_SPARSE_FIELDS * 16 + 16, 64)) * 0.05,
+    "b1": jnp.zeros(64),
+    "w2": jax.random.normal(jax.random.fold_in(key, 2), (64, 1)) * 0.05,
+    "b2": jnp.zeros(1),
+}
+
+def forward(p, batch):
+    sp = batch["batch_sparse"] % (64 * 1024)
+    emb = jnp.take(p["embed"], sp, axis=0).reshape(sp.shape[0], -1)
+    seq = jnp.take(p["embed"], batch["batch_seq_ids"] % (64 * 1024), axis=0)
+    seq = (seq * batch["batch_seq_mask"][..., None]).sum(1)
+    x = jnp.concatenate([batch["batch_dense"], emb, seq], axis=1)
+    h = jax.nn.relu(x @ p["w1"] + p["b1"])
+    return (h @ p["w2"] + p["b2"])[:, 0]
+
+def loss_fn(p, batch):
+    return sigmoid_bce(forward(p, batch), batch["batch_label"]).mean()
+
+opt = adamw(1e-2)
+state = opt.init(params)
+
+@jax.jit
+def step(p, s, batch):
+    loss, g = jax.value_and_grad(loss_fn)(p, batch)
+    p, s = opt.update(p, g, s)
+    return p, s, loss
+
+for i in range(30):
+    params, state, loss = step(params, state, batch)
+    if i % 10 == 0:
+        print(f"step {i:3d} loss {float(loss):.4f}")
+print(f"final loss {float(loss):.4f}")
+assert float(loss) < 0.7, "training should reduce loss below chance"
+print("quickstart OK")

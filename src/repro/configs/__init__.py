@@ -1,0 +1,52 @@
+"""Architecture registry: --arch <id> resolves here."""
+
+from typing import Dict, List
+
+from repro.configs.base import ArchSpec, Cell, dp_axes_for
+
+_ARCH_MODULES = (
+    "yi_9b",
+    "qwen2_5_32b",
+    "qwen2_5_14b",
+    "deepseek_v2_236b",
+    "deepseek_moe_16b",
+    "pna",
+    "bst",
+    "autoint",
+    "dcn_v2",
+    "dlrm_mlperf",
+)
+
+
+def _load() -> Dict[str, ArchSpec]:
+    import importlib
+
+    out: Dict[str, ArchSpec] = {}
+    for mod in _ARCH_MODULES:
+        m = importlib.import_module(f"repro.configs.{mod}")
+        out[m.ARCH.arch_id] = m.ARCH
+    return out
+
+
+_REGISTRY: Dict[str, ArchSpec] = {}
+
+
+def registry() -> Dict[str, ArchSpec]:
+    global _REGISTRY
+    if not _REGISTRY:
+        _REGISTRY = _load()
+    return _REGISTRY
+
+
+def get_arch(arch_id: str) -> ArchSpec:
+    reg = registry()
+    if arch_id not in reg:
+        raise KeyError(f"unknown arch {arch_id!r}; available: {sorted(reg)}")
+    return reg[arch_id]
+
+
+def list_archs() -> List[str]:
+    return sorted(registry())
+
+
+__all__ = ["ArchSpec", "Cell", "dp_axes_for", "get_arch", "list_archs", "registry"]

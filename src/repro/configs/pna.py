@@ -1,0 +1,24 @@
+"""pna: Principal Neighbourhood Aggregation, 4 layers d_hidden=75,
+aggregators mean/max/min/std, scalers id/amp/atten [arXiv:2004.05718].
+
+d_in / n_classes are per-dataset (per shape); see configs.base.GNN_SHAPES.
+"""
+
+import functools
+
+from repro.configs.base import ArchSpec, gnn_cell, gnn_config_for
+from repro.models.gnn import PNAConfig
+
+
+def smoke():
+    return PNAConfig(name="pna-smoke", n_layers=2, d_in=16, d_hidden=24,
+                     n_classes=5)
+
+
+ARCH = ArchSpec(
+    arch_id="pna", family="gnn",
+    shapes=("full_graph_sm", "minibatch_lg", "ogb_products", "molecule"),
+    build_cell=functools.partial(gnn_cell, "pna"),
+    smoke=smoke,
+    describe="PNA multi-aggregator message passing (segment ops)",
+)

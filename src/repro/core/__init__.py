@@ -1,0 +1,48 @@
+"""FeatureBox core: operator DAG, layer-wise scheduling, meta-kernels,
+memory pool, and the pipelined FE<->train executor (the paper's contribution).
+"""
+
+from repro.core.opgraph import Device, FuncDef, OpCost, Operator, OpGraph
+from repro.core.scheduler import (
+    Layer,
+    PlacedOp,
+    Schedule,
+    build_schedule,
+    validate_schedule,
+)
+from repro.core.metakernel import (
+    ExecutionStats,
+    LayerExecutable,
+    compile_layers,
+    run_layers,
+    run_unfused,
+)
+from repro.core.mempool import ALIGN, Allocation, ArenaPool, align_up, plan_offsets, required_capacity
+from repro.core.pipeline import PipelinedRunner, PipelineStats, StagedRunner
+
+__all__ = [
+    "ALIGN",
+    "Allocation",
+    "ArenaPool",
+    "Device",
+    "ExecutionStats",
+    "FuncDef",
+    "Layer",
+    "LayerExecutable",
+    "OpCost",
+    "OpGraph",
+    "Operator",
+    "PipelinedRunner",
+    "PipelineStats",
+    "PlacedOp",
+    "Schedule",
+    "StagedRunner",
+    "align_up",
+    "build_schedule",
+    "compile_layers",
+    "plan_offsets",
+    "required_capacity",
+    "run_layers",
+    "run_unfused",
+    "validate_schedule",
+]

@@ -1,0 +1,141 @@
+"""Block-level memory pool with prefix-sum allocation (paper §V, Alg. 1).
+
+The paper's mechanism: each GPU thread computes its required size; a parallel
+prefix sum over the block yields per-thread offsets; one thread bumps a global
+``idle_memory_head`` with ``atomic_add``; the pool is reset (O(1) pointer
+rewind) after every meta-kernel, because layer-wise scheduling makes all
+allocations of a layer dead once the layer's barrier passes.
+
+TPU adaptation (see DESIGN.md §2): the allocator is expressed as
+
+* :func:`plan_offsets` — jit-traceable prefix-sum offset planning used by the
+  variable-length feature ops (ragged string pieces, split results, ...).
+  Alignment is 128 *elements* (TPU lane width) instead of 128 bytes.
+* :class:`ArenaPool` — the host-side pool object that owns a flat buffer,
+  hands out layer-scoped arenas, and implements the O(1) reset between
+  meta-kernels. The bump pointer is ordinary Python state because layer
+  execution on one host is sequential (the TPU analogue of the single
+  ``atomic_add`` owner); the *device side* of Alg. 1 lives in
+  ``repro.kernels.mempool_alloc`` as a Pallas kernel with a sequential-grid
+  SMEM carry.
+
+Both paths are oracle-checked against each other in the tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ALIGN = 128  # TPU lane width; paper uses 128-byte cache alignment.
+
+
+def align_up(x, align: int = ALIGN):
+    """Round ``x`` up to a multiple of ``align`` (works on ints and arrays)."""
+    return (x + align - 1) // align * align
+
+
+def plan_offsets(sizes: jax.Array, *, align: int = ALIGN) -> Tuple[jax.Array, jax.Array]:
+    """Alg. 1 lines 1–4 as a pure function.
+
+    Args:
+      sizes: int32[N] requested element counts per "thread" (per instance).
+      align: alignment granularity in elements.
+
+    Returns:
+      offsets: int32[N] start offset of each request in the arena.
+      total:   int32[]  total arena elements consumed (aligned).
+    """
+    aligned = align_up(sizes.astype(jnp.int32), align)
+    # exclusive prefix sum == paper's prefix_i - prefix_1 with prefix from an
+    # inclusive scan; jnp.cumsum + shift keeps it O(N log N) on the VPU.
+    inclusive = jnp.cumsum(aligned)
+    offsets = inclusive - aligned
+    total = inclusive[-1] if sizes.shape[0] > 0 else jnp.int32(0)
+    return offsets, total
+
+
+@dataclasses.dataclass
+class Allocation:
+    offset: int
+    size: int
+
+
+class ArenaPool:
+    """Pre-allocated flat pool with bump allocation and O(1) reset.
+
+    Mirrors Fig. 5: ``idle_memory_head`` advances by the block's total
+    (prefix_N); ``reset()`` rewinds it to the start after each meta-kernel.
+    """
+
+    def __init__(self, capacity: int, *, align: int = ALIGN):
+        if capacity % align:
+            raise ValueError(f"capacity must be {align}-aligned, got {capacity}")
+        self.capacity = int(capacity)
+        self.align = align
+        self._head = 0
+        self._high_water = 0
+        self.n_resets = 0
+        self.n_allocs = 0
+
+    @property
+    def head(self) -> int:
+        return self._head
+
+    @property
+    def high_water(self) -> int:
+        """Peak usage across resets — sizing feedback for deployments."""
+        return self._high_water
+
+    def alloc_block(self, sizes: Sequence[int]) -> List[Allocation]:
+        """Allocate for a whole block of requests at once (Alg. 1).
+
+        One prefix sum + one head bump, regardless of len(sizes) — the
+        paper's point is that per-request allocation cost collapses to a
+        scan plus a single atomic.
+        """
+        sizes_arr = np.asarray(sizes, dtype=np.int64)
+        if sizes_arr.size == 0:
+            return []
+        if (sizes_arr < 0).any():
+            raise ValueError("negative allocation size")
+        aligned = (sizes_arr + self.align - 1) // self.align * self.align
+        prefix = np.cumsum(aligned)
+        total = int(prefix[-1])
+        base = self._head  # "atomic_add(idle_memory_head, prefix_N)"
+        if base + total > self.capacity:
+            raise MemoryError(
+                f"arena exhausted: head={base} request={total} capacity={self.capacity}"
+            )
+        self._head = base + total
+        self._high_water = max(self._high_water, self._head)
+        self.n_allocs += 1
+        offsets = prefix - aligned  # exclusive scan
+        return [Allocation(offset=base + int(o), size=int(s))
+                for o, s in zip(offsets, sizes_arr)]
+
+    def reset(self) -> None:
+        """O(1) batch free after a meta-kernel (paper §V 'Reset')."""
+        self._head = 0
+        self.n_resets += 1
+
+
+def required_capacity(layer_sizes: Sequence[Sequence[int]], *, align: int = ALIGN) -> int:
+    """Size a pool so every layer's total allocation fits (reset between layers).
+
+    The paper assumes "the total required memory for dynamic allocations
+    [per layer] fits the GPU memory"; this helper computes that bound from
+    the schedule's static cost model so the assumption is checked, not hoped.
+    """
+    worst = 0
+    for sizes in layer_sizes:
+        arr = np.asarray(list(sizes), dtype=np.int64)
+        if arr.size == 0:
+            continue
+        aligned = (arr + align - 1) // align * align
+        worst = max(worst, int(aligned.sum()))
+    return int(align_up(worst, align))

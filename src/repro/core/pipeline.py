@@ -1,0 +1,171 @@
+"""End-to-end pipelined execution (paper Fig. 1 lower / Fig. 3).
+
+FeatureBox's headline mechanism: feature extraction and training share the
+same servers and run as a mini-batch pipeline, so extracted features are fed
+directly into the trainer without materializing intermediates.
+
+Two executors are provided so the benchmarks can reproduce Table II:
+
+* :class:`PipelinedRunner` — FeatureBox mode. A host prefetch thread runs the
+  FE schedule for batch i+1 while the device trains on batch i (double
+  buffering). JAX's async dispatch provides the device-side overlap; the
+  bounded queue provides backpressure.
+* :class:`StagedRunner` — the MapReduce-style baseline: stage after stage,
+  each stage writes its full output to disk (the "intermediate files" of
+  Fig. 1 upper) and the next stage reads it back. Tracks intermediate bytes
+  so the I/O-elimination claim is measurable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import queue
+import threading
+import time
+from typing import Any, Callable, Dict, Iterable, Iterator, List, Mapping, Optional
+
+import numpy as np
+
+from repro.core.metakernel import ExecutionStats, LayerExecutable, run_layers
+
+# Sentinel for end-of-stream in the prefetch queue.
+_DONE = object()
+
+
+@dataclasses.dataclass
+class PipelineStats:
+    batches: int = 0
+    fe_seconds: float = 0.0
+    train_seconds: float = 0.0
+    wall_seconds: float = 0.0
+    intermediate_bytes: int = 0  # bytes written to disk between stages
+    exec_stats: ExecutionStats = dataclasses.field(default_factory=ExecutionStats)
+
+
+class PipelinedRunner:
+    """FeatureBox: FE for batch i+1 overlaps training on batch i."""
+
+    def __init__(
+        self,
+        layers: List[LayerExecutable],
+        train_step: Callable[[Any, Mapping[str, Any]], Any],
+        *,
+        prefetch: int = 2,
+        device=None,
+    ) -> None:
+        self.layers = layers
+        self.train_step = train_step
+        self.prefetch = prefetch
+        self.device = device
+        self.stats = PipelineStats()
+
+    def _fe_worker(self, batches: Iterator[Mapping[str, Any]], q: "queue.Queue") -> None:
+        try:
+            for raw in batches:
+                t0 = time.perf_counter()
+                env = dict(raw)
+                run_layers(self.layers, env, device=self.device,
+                           stats=self.stats.exec_stats)
+                self.stats.fe_seconds += time.perf_counter() - t0
+                q.put(env)
+        except BaseException as e:  # surface worker failures to the consumer
+            q.put(e)
+        finally:
+            q.put(_DONE)
+
+    def run(self, state: Any, batches: Iterable[Mapping[str, Any]]) -> Any:
+        q: "queue.Queue" = queue.Queue(maxsize=self.prefetch)
+        t_start = time.perf_counter()
+        worker = threading.Thread(
+            target=self._fe_worker, args=(iter(batches), q), daemon=True
+        )
+        worker.start()
+        while True:
+            item = q.get()
+            if item is _DONE:
+                break
+            if isinstance(item, BaseException):
+                raise item
+            t0 = time.perf_counter()
+            state = self.train_step(state, item)
+            self.stats.train_seconds += time.perf_counter() - t0
+            self.stats.batches += 1
+        worker.join()
+        self.stats.wall_seconds = time.perf_counter() - t_start
+        return state
+
+
+class StagedRunner:
+    """Baseline: materialize every stage's output before the next stage runs.
+
+    Mirrors the paper's Fig. 1 (upper): MapReduce jobs write intermediate
+    files to the DFS; the trainer then streams the final features back. Here
+    each scheduled layer plays the role of one MapReduce job and writes its
+    produced slots to ``workdir`` as .npy files.
+    """
+
+    def __init__(
+        self,
+        layers: List[LayerExecutable],
+        train_step: Callable[[Any, Mapping[str, Any]], Any],
+        *,
+        workdir: str,
+        device=None,
+    ) -> None:
+        self.layers = layers
+        self.train_step = train_step
+        self.workdir = workdir
+        self.device = device
+        self.stats = PipelineStats()
+        os.makedirs(workdir, exist_ok=True)
+
+    def _materialize(self, env: Dict[str, Any], stage: int, batch: int) -> Dict[str, Any]:
+        """Write every slot to disk and read it back (stage boundary).
+
+        Slots may be arrays, dicts of columns (views), or ragged columns —
+        each is written like the MapReduce intermediates it stands in for.
+        """
+        out: Dict[str, Any] = {}
+        for slot, val in env.items():
+            out[slot] = self._roundtrip(val, f"b{batch}_s{stage}_{_safe(slot)}")
+        return out
+
+    def _roundtrip(self, val: Any, stem: str) -> Any:
+        if isinstance(val, dict):
+            return {k: self._roundtrip(v, f"{stem}__{_safe(str(k))}")
+                    for k, v in val.items()}
+        if hasattr(val, "values") and hasattr(val, "lengths"):  # RaggedColumn
+            vals = self._roundtrip(np.asarray(val.values), stem + "__values")
+            lens = self._roundtrip(np.asarray(val.lengths), stem + "__lengths")
+            return type(val)(values=vals, lengths=lens)
+        arr = np.asarray(val)
+        path = os.path.join(self.workdir, stem + ".npy")
+        np.save(path, arr, allow_pickle=True)  # string columns are object arrays
+        self.stats.intermediate_bytes += arr.nbytes
+        return np.load(path, allow_pickle=True)
+
+    def run(self, state: Any, batches: Iterable[Mapping[str, Any]]) -> Any:
+        t_start = time.perf_counter()
+        all_batches = list(batches)
+        # Stage-after-stage: run *every* batch through layer k, materialize,
+        # then move to layer k+1 — the defining property of the baseline.
+        envs: List[Dict[str, Any]] = [dict(b) for b in all_batches]
+        for li, layer in enumerate(self.layers):
+            t0 = time.perf_counter()
+            for bi, env in enumerate(envs):
+                run_layers([layer], env, device=self.device,
+                           stats=self.stats.exec_stats)
+                envs[bi] = self._materialize(env, li, bi)
+            self.stats.fe_seconds += time.perf_counter() - t0
+        for env in envs:
+            t0 = time.perf_counter()
+            state = self.train_step(state, env)
+            self.stats.train_seconds += time.perf_counter() - t0
+            self.stats.batches += 1
+        self.stats.wall_seconds = time.perf_counter() - t_start
+        return state
+
+
+def _safe(slot: str) -> str:
+    return "".join(c if c.isalnum() or c in "-_" else "_" for c in slot)

@@ -1,0 +1,33 @@
+"""Embedding substrate: dedup working sets, sharded tables, hierarchical PS."""
+
+from repro.embedding.dedup import dedup, dedup_np, scatter_unique_grads, undedup
+from repro.embedding.hierarchy import HierarchicalPS, TierStats
+from repro.embedding.table import (
+    MultiTable,
+    SparseAdagradState,
+    TableSpec,
+    bag_lookup_padded,
+    bag_lookup_segment,
+    init_sparse_adagrad,
+    lookup,
+    lookup_dedup,
+    sparse_grad_update,
+)
+
+__all__ = [
+    "HierarchicalPS",
+    "MultiTable",
+    "SparseAdagradState",
+    "TableSpec",
+    "TierStats",
+    "bag_lookup_padded",
+    "bag_lookup_segment",
+    "dedup",
+    "dedup_np",
+    "init_sparse_adagrad",
+    "lookup",
+    "lookup_dedup",
+    "scatter_unique_grads",
+    "sparse_grad_update",
+    "undedup",
+]

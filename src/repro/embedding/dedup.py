@@ -1,0 +1,104 @@
+"""Per-batch working-set construction (dedup of sparse ids).
+
+The hierarchical GPU parameter server's key observation ([37], §II-B): the
+number of *referenced* parameters in a mini-batch fits device memory because
+inputs are sparse. FeatureBox inherits this — before any table access, a
+batch's ids are deduplicated and remapped to a dense local index space.
+
+``dedup`` is jit-traceable (static working-set capacity); ``dedup_np`` is the
+host twin used by the hierarchical PS pull path.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Sentinel for unused working-set slots (never a valid row id).
+FILL = jnp.int32(2**31 - 1)
+
+
+def dedup(ids: jax.Array, *, capacity: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Deduplicate a batch of sparse ids into a fixed-capacity working set.
+
+    Args:
+      ids: int[ ... ] arbitrary-shape batch of row ids (>= 0).
+      capacity: static upper bound on unique ids (working-set size). Must be
+        >= the true unique count; verify with ``count`` downstream.
+
+    Returns:
+      unique:  int32[capacity] unique ids, FILL-padded.
+      inverse: int32[ids.shape] position of each id inside ``unique``.
+      count:   int32[] true number of unique ids (<= capacity if valid).
+    """
+    flat = ids.reshape(-1).astype(jnp.int32)
+    unique, inverse = jnp.unique(
+        flat, return_inverse=True, size=capacity, fill_value=FILL
+    )
+    count = jnp.sum(unique != FILL).astype(jnp.int32)
+    return unique, inverse.reshape(ids.shape).astype(jnp.int32), count
+
+
+def dedup_np(ids: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Host dedup (exact size): returns (unique ids, inverse)."""
+    unique, inverse = np.unique(ids.reshape(-1), return_inverse=True)
+    return unique.astype(np.int64), inverse.reshape(ids.shape).astype(np.int32)
+
+
+def undedup(rows: jax.Array, inverse: jax.Array) -> jax.Array:
+    """Expand working-set rows back to per-slot rows: rows[inverse]."""
+    return jnp.take(rows, inverse, axis=0)
+
+
+def dedup_hierarchical(
+    ids: jax.Array, *, capacity: int, mesh, axes, local_capacity: int
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Two-stage dedup: per-shard local unique, then global unique of the
+    pooled local uniques.
+
+    The global distributed sort inside a flat ``jnp.unique`` over B x F ids is
+    the measured bound of the recsys train step (EXPERIMENTS.md §Perf pair 1);
+    deduping locally first shrinks the globally-sorted pool to
+    n_shards x local_capacity (< the raw id count whenever shards see repeated
+    ids). Semantics match :func:`dedup` (same unique set, FILL-padded).
+
+    ``ids`` must be sharded over ``axes`` on its leading dim.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    flat = ids.reshape(-1).astype(jnp.int32)
+    n_shards = int(np.prod([mesh.shape[a] for a in axes]))
+
+    def local(stage_ids):
+        u, inv = jnp.unique(stage_ids.reshape(-1), return_inverse=True,
+                            size=local_capacity, fill_value=FILL)
+        return u[None], inv[None].astype(jnp.int32)
+
+    local_u, local_inv = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=P(axes),
+        out_specs=(P(axes, None), P(axes, None)),
+        check_vma=False,
+    )(flat)                                   # (n_shards, cap_loc), (n_shards, B_loc)
+
+    pool = local_u.reshape(-1)                # (n_shards * cap_loc,)
+    unique, inv_pool = jnp.unique(pool, return_inverse=True,
+                                  size=capacity, fill_value=FILL)
+    inv_pool = inv_pool.reshape(n_shards, local_capacity)
+    # compose: element e of shard s -> local_inv[s, e] -> inv_pool[s, .]
+    final_inv = jnp.take_along_axis(inv_pool, local_inv.astype(jnp.int32),
+                                    axis=1).reshape(ids.shape)
+    count = jnp.sum(unique != FILL).astype(jnp.int32)
+    return unique, final_inv.astype(jnp.int32), count
+
+
+def scatter_unique_grads(
+    grad_rows: jax.Array, inverse: jax.Array, capacity: int
+) -> jax.Array:
+    """Accumulate per-slot gradients onto the working set (transpose of undedup)."""
+    flat = grad_rows.reshape(-1, grad_rows.shape[-1])
+    seg = inverse.reshape(-1)
+    return jax.ops.segment_sum(flat, seg, num_segments=capacity)

@@ -1,0 +1,130 @@
+"""Hierarchical parameter server: HBM <- host DRAM <- SSD (paper §II-B, [37]).
+
+Three tiers, upper acting as a cache of lower:
+
+* **SSD tier** — the full table as a file-backed ``np.memmap`` (the 10TB+
+  production table that fits no single memory).
+* **Host tier** — an LRU cache of recently-used rows in host DRAM.
+* **Device tier** — the per-batch working set, pulled by ``pull()`` after
+  dedup and pushed back by ``push()`` after the optimizer step.
+
+This is deliberately a *host-side software* component: JAX sees only the
+dense working-set array, so the training step stays jit/pjit-clean. The
+pull/push boundary is exactly the paper's CPU<->GPU H2D/D2H seam.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import os
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.embedding.dedup import dedup_np
+
+
+@dataclasses.dataclass
+class TierStats:
+    host_hits: int = 0
+    ssd_reads: int = 0
+    pulls: int = 0
+    pushes: int = 0
+    pulled_rows: int = 0
+    pushed_rows: int = 0
+
+
+class HierarchicalPS:
+    """File-backed embedding table with a host LRU row cache."""
+
+    def __init__(
+        self,
+        path: str,
+        *,
+        total_rows: int,
+        dim: int,
+        host_cache_rows: int = 100_000,
+        init_scale: Optional[float] = None,
+        seed: int = 0,
+        create: bool = True,
+    ) -> None:
+        self.total_rows = total_rows
+        self.dim = dim
+        self.host_cache_rows = host_cache_rows
+        self.path = path
+        mode = "r+"
+        if create and not os.path.exists(path):
+            os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+            mm = np.memmap(path, dtype=np.float32, mode="w+", shape=(total_rows, dim))
+            scale = init_scale if init_scale is not None else 1.0 / np.sqrt(dim)
+            rng = np.random.default_rng(seed)
+            # chunked init so huge tables never materialize in RAM
+            step = max(1, (1 << 24) // max(dim, 1))
+            for s in range(0, total_rows, step):
+                e = min(total_rows, s + step)
+                mm[s:e] = rng.uniform(-scale, scale, (e - s, dim)).astype(np.float32)
+            mm.flush()
+            del mm
+        self._ssd = np.memmap(path, dtype=np.float32, mode=mode, shape=(total_rows, dim))
+        # host LRU: row id -> row array (most recently used last)
+        self._host: "collections.OrderedDict[int, np.ndarray]" = collections.OrderedDict()
+        self.stats = TierStats()
+
+    # ------------------------------------------------------------------ pull
+    def pull(self, ids: np.ndarray) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Fetch the deduped working set for a batch.
+
+        Returns (working_table f32[U, D], unique_ids int64[U], inverse int32[ids.shape]).
+        The device trains against ``working_table``; ``inverse`` remaps batch
+        slots into it (see ``embedding.dedup``).
+        """
+        unique, inverse = dedup_np(np.asarray(ids))
+        out = np.empty((len(unique), self.dim), np.float32)
+        miss_rows = []
+        miss_pos = []
+        for i, rid in enumerate(unique):
+            rid = int(rid)
+            row = self._host.get(rid)
+            if row is not None:
+                self._host.move_to_end(rid)
+                out[i] = row
+                self.stats.host_hits += 1
+            else:
+                miss_rows.append(rid)
+                miss_pos.append(i)
+        if miss_rows:
+            # single vectorized SSD read for all misses
+            rows = self._ssd[np.asarray(miss_rows)]
+            self.stats.ssd_reads += len(miss_rows)
+            for pos, rid, row in zip(miss_pos, miss_rows, rows):
+                out[pos] = row
+                self._cache_row(rid, row.copy())
+        self.stats.pulls += 1
+        self.stats.pulled_rows += len(unique)
+        return out, unique, inverse
+
+    # ------------------------------------------------------------------ push
+    def push(self, unique_ids: np.ndarray, rows: np.ndarray) -> None:
+        """Write updated working-set rows back (host cache + SSD write-through)."""
+        ids = np.asarray(unique_ids)
+        rows = np.asarray(rows, np.float32)
+        self._ssd[ids] = rows
+        for rid, row in zip(ids, rows):
+            self._cache_row(int(rid), row.copy())
+        self.stats.pushes += 1
+        self.stats.pushed_rows += len(ids)
+
+    def flush(self) -> None:
+        self._ssd.flush()
+
+    # ------------------------------------------------------------------ util
+    def _cache_row(self, rid: int, row: np.ndarray) -> None:
+        self._host[rid] = row
+        self._host.move_to_end(rid)
+        while len(self._host) > self.host_cache_rows:
+            self._host.popitem(last=False)  # evict LRU
+
+    @property
+    def host_cache_size(self) -> int:
+        return len(self._host)

@@ -1,0 +1,155 @@
+"""Sharded embedding tables + EmbeddingBag (the recsys hot path).
+
+JAX has no native EmbeddingBag or CSR sparse; the lookup substrate is built
+from ``jnp.take`` + ``jax.ops.segment_sum`` as first-class system code:
+
+* :class:`TableSpec` / :class:`MultiTable` — many logical tables (one per
+  sparse field) packed into ONE physical (sum(vocab), dim) array with field
+  offsets. Packing keeps the pjit sharding rule trivial: rows sharded over
+  the flattened ('data','model') mesh axes, dim replicated.
+* ``lookup`` — one embedding row per (row, field) id: plain sharded gather.
+* ``lookup_dedup`` — FeatureBox/[37] working-set path: dedup ids, gather the
+  unique rows once (collective traffic ∝ unique count, not batch × fields),
+  then expand on-device. This is the paper-faithful optimization measured in
+  §Perf.
+* ``bag_lookup`` — multi-hot bags (B, L) + weights -> (B, D) via the Pallas
+  kernel over a working-set slice, or the segment_sum reference.
+* ``sparse_grad_update`` — Adagrad on touched rows only (production CTR
+  models update embeddings sparsely; dense updates of a 10TB table per step
+  are impossible).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.embedding.dedup import dedup, scatter_unique_grads, undedup
+
+
+@dataclasses.dataclass(frozen=True)
+class TableSpec:
+    """One logical embedding table (one sparse field)."""
+
+    name: str
+    vocab: int
+    dim: int
+
+
+@dataclasses.dataclass(frozen=True)
+class MultiTable:
+    """Several logical tables packed into one physical array."""
+
+    specs: Tuple[TableSpec, ...]
+    dim: int
+
+    @staticmethod
+    def build(specs: Sequence[TableSpec]) -> "MultiTable":
+        dims = {s.dim for s in specs}
+        if len(dims) != 1:
+            raise ValueError(f"all tables must share dim, got {dims}")
+        return MultiTable(specs=tuple(specs), dim=dims.pop())
+
+    @property
+    def offsets(self) -> np.ndarray:
+        """Row offset of each field in the packed array."""
+        sizes = np.array([s.vocab for s in self.specs], np.int64)
+        return np.concatenate([[0], np.cumsum(sizes)[:-1]])
+
+    @property
+    def total_rows(self) -> int:
+        return int(sum(s.vocab for s in self.specs))
+
+    def init(self, key: jax.Array, *, dtype=jnp.float32, scale: Optional[float] = None) -> jax.Array:
+        """Packed parameter array (V_total, D)."""
+        scale = scale if scale is not None else 1.0 / np.sqrt(self.dim)
+        return jax.random.uniform(
+            key, (self.total_rows, self.dim), dtype=dtype, minval=-scale, maxval=scale
+        )
+
+    def global_ids(self, field_ids: jax.Array) -> jax.Array:
+        """Per-field local ids (B, F) -> packed global row ids (B, F)."""
+        offs = jnp.asarray(self.offsets, jnp.int32)
+        return field_ids.astype(jnp.int32) + offs[None, :]
+
+
+# ------------------------------------------------------------------ lookups
+def lookup(params: jax.Array, ids: jax.Array) -> jax.Array:
+    """Plain embedding lookup: (..., ) ids -> (..., D) rows (sharded gather)."""
+    return jnp.take(params, ids, axis=0)
+
+
+def lookup_dedup(params: jax.Array, ids: jax.Array, *, capacity: int) -> jax.Array:
+    """Working-set lookup: gather unique rows once, expand locally.
+
+    With row-sharded ``params`` the cross-device traffic of the gather is
+    proportional to ``capacity`` instead of ``ids.size`` — the measurable
+    win of the paper's dedup insight (see EXPERIMENTS.md §Perf).
+    """
+    unique, inverse, _ = dedup(ids, capacity=capacity)
+    safe = jnp.where(unique == jnp.int32(2**31 - 1), 0, unique)
+    working = jnp.take(params, safe, axis=0)          # (capacity, D) gather
+    return undedup(working, inverse)                   # local expand
+
+
+def bag_lookup_segment(
+    params: jax.Array, flat_ids: jax.Array, segment_ids: jax.Array, n_segments: int
+) -> jax.Array:
+    """Ragged EmbeddingBag: sum rows of each segment (take + segment_sum)."""
+    rows = jnp.take(params, flat_ids, axis=0)
+    return jax.ops.segment_sum(rows, segment_ids, num_segments=n_segments)
+
+
+def bag_lookup_padded(params: jax.Array, ids: jax.Array, mask: jax.Array) -> jax.Array:
+    """Padded EmbeddingBag: (B, L) ids + (B, L) mask -> (B, D)."""
+    rows = jnp.take(params, ids, axis=0)              # (B, L, D)
+    return (rows * mask[..., None].astype(rows.dtype)).sum(axis=1)
+
+
+# ----------------------------------------------------------- sparse updates
+@dataclasses.dataclass
+class SparseAdagradState:
+    """Per-row accumulator for the embedding table (same shape rows x 1)."""
+
+    accum: jax.Array  # f32[V_total]
+
+
+def init_sparse_adagrad(total_rows: int, *, init: float = 0.1) -> SparseAdagradState:
+    return SparseAdagradState(accum=jnp.full((total_rows,), init, jnp.float32))
+
+
+def sparse_grad_update(
+    params: jax.Array,
+    state: SparseAdagradState,
+    ids: jax.Array,
+    grad_rows: jax.Array,
+    *,
+    capacity: int,
+    lr: float = 0.01,
+    eps: float = 1e-10,
+) -> Tuple[jax.Array, SparseAdagradState]:
+    """Adagrad update touching only the batch's unique rows.
+
+    ``ids``: int[N] global row ids of the batch (may repeat);
+    ``grad_rows``: f32[N, D] gradient of each referenced row instance.
+    """
+    unique, inverse, _ = dedup(ids, capacity=capacity)
+    g = scatter_unique_grads(grad_rows, inverse, capacity)       # (cap, D)
+    safe = jnp.where(unique == jnp.int32(2**31 - 1), 0, unique)
+    valid = (unique != jnp.int32(2**31 - 1)).astype(jnp.float32)[:, None]
+    g = g * valid
+    gsq = jnp.sum(g * g, axis=-1)                                 # row norm^2
+    accum_rows = jnp.take(state.accum, safe) + gsq
+    scale = lr / (jnp.sqrt(accum_rows) + eps)
+    new_rows = jnp.take(params, safe, axis=0) - scale[:, None] * g
+    params = params.at[safe].set(
+        jnp.where(valid > 0, new_rows, jnp.take(params, safe, axis=0))
+    )
+    accum = state.accum.at[safe].set(
+        jnp.where(valid[:, 0] > 0, accum_rows, jnp.take(state.accum, safe))
+    )
+    return params, SparseAdagradState(accum=accum)

@@ -1,0 +1,13 @@
+"""Feature-extraction substrate: column store, views, joins, FE ops, datagen."""
+
+from repro.fe.colstore import ColumnStore, Columns, RaggedColumn
+from repro.fe.schema import ColType, Column, ViewSchema
+
+__all__ = [
+    "ColType",
+    "Column",
+    "ColumnStore",
+    "Columns",
+    "RaggedColumn",
+    "ViewSchema",
+]

@@ -1,0 +1,150 @@
+"""Feature-extraction operator library (paper §III "Extract features").
+
+Every new engineered feature is an operator over the joined structured table.
+Device ops are pure jnp (traceable, fusable into per-layer meta-kernels);
+host ops handle strings. The integer mixing hash is shared with the Pallas
+``feature_hash`` kernel and its oracle, so all three agree bit-for-bit.
+
+All hashes land in a fixed feature space of ``2**bits`` slots per field; the
+sparse id convention is ``field_offset + (hash % field_size)`` — the classic
+"~10^12-dimensional one/multi-hot encoding" of production CTR models.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fe.colstore import Columns, RaggedColumn
+
+# ----------------------------------------------------------------- hashing
+# Finalizer of MurmurHash3 (fmix32) — good avalanche, cheap on the VPU
+# (mul/xor/shift only). 32-bit arithmetic is used everywhere (jnp default has
+# x64 disabled; TPU integer units are 32-bit) so the jnp, numpy, and Pallas
+# implementations agree bit-for-bit.
+_C1 = np.uint32(0x85EBCA6B)
+_C2 = np.uint32(0xC2B2AE35)
+_GOLDEN = np.uint32(0x9E3779B9)
+
+
+def fmix32(x: jax.Array) -> jax.Array:
+    """MurmurHash3 32-bit finalizer on uint32 arrays (jnp, jittable)."""
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> np.uint32(16))
+    x = x * _C1
+    x = x ^ (x >> np.uint32(13))
+    x = x * _C2
+    x = x ^ (x >> np.uint32(16))
+    return x
+
+
+def fmix32_np(x: np.ndarray) -> np.ndarray:
+    """Numpy twin of :func:`fmix32` (host ops + kernel oracle)."""
+    with np.errstate(over="ignore"):
+        x = np.asarray(x).astype(np.uint32)
+        x = x ^ (x >> np.uint32(16))
+        x = x * _C1
+        x = x ^ (x >> np.uint32(13))
+        x = x * _C2
+        x = x ^ (x >> np.uint32(16))
+        return x
+
+
+def hash_combine(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Order-sensitive combine of two id columns (jnp)."""
+    a = a.astype(jnp.uint32)
+    b = b.astype(jnp.uint32)
+    return fmix32(a * _GOLDEN + fmix32(b))
+
+
+def hash_combine_np(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    with np.errstate(over="ignore"):
+        a = np.asarray(a).astype(np.uint32)
+        b = np.asarray(b).astype(np.uint32)
+        return fmix32_np(a * _GOLDEN + fmix32_np(b))
+
+
+# Backwards-compatible aliases (64-bit names kept for callers/tests).
+fmix64 = fmix32
+fmix64_np = fmix32_np
+
+
+# ----------------------------------------------------------- device FE ops
+def cross_feature(a: jax.Array, b: jax.Array, *, field_size: int) -> jax.Array:
+    """Feature combination: cross two categorical columns into one id."""
+    return (hash_combine(a, b) % np.uint32(field_size)).astype(jnp.int32)
+
+
+def bucketize(x: jax.Array, boundaries: Sequence[float]) -> jax.Array:
+    """Discretize a float column into integer buckets (right-open)."""
+    b = jnp.asarray(list(boundaries), dtype=jnp.float32)
+    return jnp.searchsorted(b, x.astype(jnp.float32), side="right").astype(jnp.int32)
+
+
+def log_norm(x: jax.Array) -> jax.Array:
+    """log(1+x) transform used for Criteo-style dense counters."""
+    return jnp.log1p(jnp.maximum(x.astype(jnp.float32), 0.0))
+
+
+def sparse_id(hashed: jax.Array, *, field_index: int, field_size: int) -> jax.Array:
+    """Map a per-field hash into the global sparse id space (int32-exact)."""
+    return (hashed.astype(jnp.int32) % field_size) + field_index * field_size
+
+
+def clip_seq(ids: jax.Array, *, max_len: int, pad_id: int = 0) -> jax.Array:
+    """Truncate/pad a dense [B, L] id matrix to max_len (behavior sequences)."""
+    b, l = ids.shape
+    if l >= max_len:
+        return ids[:, :max_len]
+    pad = jnp.full((b, max_len - l), pad_id, ids.dtype)
+    return jnp.concatenate([ids, pad], axis=1)
+
+
+# ------------------------------------------------------------- host FE ops
+def tokenize_hash(strings: np.ndarray, *, field_size: int, ngrams: int = 1) -> RaggedColumn:
+    """Keyword extraction: split on whitespace, hash (n-gram) tokens.
+
+    This is the paper's "extract keywords with language models" stand-in: a
+    host (string) op producing a ragged int column whose per-row lengths vary
+    — the workload class Alg. 1's allocator exists for.
+    """
+    values: List[int] = []
+    lengths: List[int] = []
+    for s in strings:
+        toks = str(s).split()
+        grams = [
+            " ".join(toks[i: i + n])
+            for n in range(1, ngrams + 1)
+            for i in range(len(toks) - n + 1)
+        ]
+        ids = [
+            int(fmix32_np(np.uint32(hash(g) & 0xFFFFFFFF)) % np.uint32(field_size))
+            for g in grams
+        ]
+        values.extend(ids)
+        lengths.append(len(ids))
+    return RaggedColumn(
+        values=np.asarray(values, np.int64), lengths=np.asarray(lengths, np.int32)
+    )
+
+
+def ragged_to_padded(col: RaggedColumn, *, max_len: int, pad_id: int = 0) -> Tuple[np.ndarray, np.ndarray]:
+    """Densify a ragged column into [B, max_len] + mask for device consumption."""
+    b = col.n_rows
+    out = np.full((b, max_len), pad_id, np.int64)
+    mask = np.zeros((b, max_len), np.float32)
+    offs = col.offsets()
+    for i in range(b):
+        n = min(int(col.lengths[i]), max_len)
+        out[i, :n] = col.values[offs[i]: offs[i] + n]
+        mask[i, :n] = 1.0
+    return out, mask
+
+
+def ragged_to_bag(col: RaggedColumn) -> Tuple[np.ndarray, np.ndarray]:
+    """Ragged column -> (flat ids, segment ids) for EmbeddingBag lookup."""
+    segs = np.repeat(np.arange(col.n_rows, dtype=np.int32), col.lengths)
+    return col.values.astype(np.int64), segs

@@ -1,0 +1,2 @@
+"""embedding_bag kernel package."""
+from repro.kernels.embedding_bag.ops import *  # noqa: F401,F403

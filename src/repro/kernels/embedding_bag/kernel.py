@@ -1,0 +1,95 @@
+"""Pallas TPU kernel: fused EmbeddingBag (gather + weighted segment reduce).
+
+JAX has no native ``EmbeddingBag``; the substrate builds it from ``jnp.take``
++ ``segment_sum`` (see ``ref.py`` and ``repro.embedding.table``). This kernel
+is the TPU-native hot path for the *working set* lookup of the hierarchical
+parameter server: after per-batch dedup (FeatureBox/[37]: "the number of
+referenced parameters in a mini-batch fits the GPU memory"), the deduped
+table slice ``table[U, D]`` lives in fast memory and every bag id is already
+remapped to ``[0, U)``.
+
+TPU adaptation (DESIGN.md §2): instead of a row-gather (poor fit for the MXU
+and for VMEM DMA granularity) the lookup is computed as a **blocked one-hot
+matmul**: for each vocab block ``V_b`` the kernel forms the one-hot matrix of
+the bag ids that fall inside the block and contracts it with the block's rows
+on the MXU, accumulating into the output:
+
+    out[b, :] += sum_l  w[b,l] * onehot(ids[b,l] - v0, V_b) @ table[v0:v0+V_b]
+
+Grid = (batch tiles, vocab blocks); vocab is the minor (fastest) axis so each
+output tile stays resident in VMEM while table blocks stream through.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BATCH_TILE = 256   # bags per grid step
+VOCAB_BLOCK = 512  # table rows per grid step (MXU-aligned multiple of 128)
+
+
+def _bag_kernel(ids_ref, w_ref, table_ref, out_ref, *, vocab_block: int):
+    vstep = pl.program_id(1)
+
+    @pl.when(vstep == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    ids = ids_ref[...]            # (Bt, L) int32, already working-set-local
+    w = w_ref[...]                # (Bt, L) f32 weights (0 for padding)
+    table = table_ref[...]        # (Vb, D) f32
+
+    v0 = vstep * vocab_block
+    local = ids - v0              # position within this vocab block
+    in_block = (local >= 0) & (local < vocab_block)
+    # one-hot over the block, masked by weight and membership -> (Bt*L, Vb)
+    bt, l = ids.shape
+    onehot = (
+        local.reshape(bt * l, 1)
+        == jax.lax.broadcasted_iota(jnp.int32, (bt * l, vocab_block), 1)
+    )
+    wflat = (w * in_block.astype(w.dtype)).reshape(bt * l, 1)
+    contrib = (onehot.astype(table.dtype) * wflat) @ table      # MXU matmul
+    out_ref[...] += contrib.reshape(bt, l, -1).sum(axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def embedding_bag(ids: jax.Array, weights: jax.Array, table: jax.Array,
+                  *, interpret: bool = True) -> jax.Array:
+    """Weighted-sum EmbeddingBag: out[b] = sum_l weights[b,l] * table[ids[b,l]].
+
+    Args:
+      ids:     int32[B, L] working-set-local ids (0 <= id < U).
+      weights: f32[B, L] per-slot weights (0 disables a slot — padding).
+      table:   f32[U, D] working-set embedding rows.
+    Returns:
+      f32[B, D].
+    """
+    b, l = ids.shape
+    u, d = table.shape
+    b_pad = (b + BATCH_TILE - 1) // BATCH_TILE * BATCH_TILE
+    u_pad = (u + VOCAB_BLOCK - 1) // VOCAB_BLOCK * VOCAB_BLOCK
+    if b_pad != b:
+        ids = jnp.pad(ids, ((0, b_pad - b), (0, 0)))
+        weights = jnp.pad(weights, ((0, b_pad - b), (0, 0)))
+    if u_pad != u:
+        table = jnp.pad(table, ((0, u_pad - u), (0, 0)))
+    grid = (b_pad // BATCH_TILE, u_pad // VOCAB_BLOCK)
+    out = pl.pallas_call(
+        functools.partial(_bag_kernel, vocab_block=VOCAB_BLOCK),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BATCH_TILE, l), lambda i, j: (i, 0)),
+            pl.BlockSpec((BATCH_TILE, l), lambda i, j: (i, 0)),
+            pl.BlockSpec((VOCAB_BLOCK, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((BATCH_TILE, d), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b_pad, d), table.dtype),
+        interpret=interpret,
+    )(ids.astype(jnp.int32), weights.astype(table.dtype), table)
+    return out[:b]

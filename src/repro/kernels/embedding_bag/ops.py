@@ -1,0 +1,25 @@
+"""Jitted public wrapper for the EmbeddingBag kernel.
+
+The kernel path expects a *working set* table (post-dedup); callers with a
+full sharded table go through ``repro.embedding.table`` which performs dedup
++ device gather first, then calls this on the dense slice.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.embedding_bag.kernel import embedding_bag
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+
+
+def bag_lookup(ids: jax.Array, weights: jax.Array, table: jax.Array,
+               *, use_kernel: bool = True) -> jax.Array:
+    """Weighted EmbeddingBag over a working-set table."""
+    if ids.ndim != 2 or weights.shape != ids.shape or table.ndim != 2:
+        raise ValueError(f"bad shapes ids={ids.shape} w={weights.shape} table={table.shape}")
+    if not use_kernel:
+        return embedding_bag_ref(ids, weights, table)
+    interpret = jax.default_backend() != "tpu"
+    return embedding_bag(ids, weights, table, interpret=interpret)

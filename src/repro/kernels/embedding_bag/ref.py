@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the EmbeddingBag kernel: take + weighted sum."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(ids: jax.Array, weights: jax.Array, table: jax.Array) -> jax.Array:
+    """out[b] = sum_l weights[b,l] * table[ids[b,l]] via gather."""
+    rows = jnp.take(table, ids, axis=0)                  # (B, L, D)
+    return (rows * weights[..., None].astype(table.dtype)).sum(axis=1)
+
+
+def embedding_bag_segment_ref(flat_ids: jax.Array, segment_ids: jax.Array,
+                              table: jax.Array, n_segments: int) -> jax.Array:
+    """Ragged-form oracle (flat ids + segment ids), unweighted sum."""
+    rows = jnp.take(table, flat_ids, axis=0)
+    return jax.ops.segment_sum(rows, segment_ids, num_segments=n_segments)

@@ -1,0 +1,2 @@
+"""feature_hash kernel package."""
+from repro.kernels.feature_hash.ops import *  # noqa: F401,F403

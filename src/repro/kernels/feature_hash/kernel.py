@@ -1,0 +1,89 @@
+"""Pallas TPU meta-kernel for a layer of hash/cross feature-extraction ops.
+
+This is the paper's §IV meta-kernel made concrete: the scheduler fixes the
+set of same-layer FE operators ahead of training; here each hash/cross op of
+the layer becomes a *device function* (a traced Python function), and ONE
+``pallas_call`` executes all of them over a shared VMEM tile of the input
+columns — one launch per layer instead of one per operator (Table I).
+
+The op program is a static tuple of ``(kind, a_col, b_col, field_size)``:
+
+* ``("cross", a, b, m)``  -> fmix32(a*GOLDEN + fmix32(b)) % m   (feature cross)
+* ``("hash", a, _, m)``   -> fmix32(a) % m                      (single-column hash)
+* ``("mod",  a, _, m)``   -> a % m                              (id passthrough)
+
+All arithmetic is uint32 (TPU-native), matching ``repro.fe.ops`` bit-for-bit.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+_C1 = np.uint32(0x85EBCA6B)
+_C2 = np.uint32(0xC2B2AE35)
+_GOLDEN = np.uint32(0x9E3779B9)
+
+ROW_TILE = 1024
+
+OpProgram = Tuple[Tuple[str, int, int, int], ...]
+
+
+def _fmix32(x):
+    x = x ^ (x >> np.uint32(16))
+    x = x * _C1
+    x = x ^ (x >> np.uint32(13))
+    x = x * _C2
+    x = x ^ (x >> np.uint32(16))
+    return x
+
+
+def _hash_layer_kernel(cols_ref, out_ref, *, program: OpProgram):
+    cols = cols_ref[...].astype(jnp.uint32)  # (K, T)
+    outs = []
+    # The schedule is fixed ahead of time, so the program unrolls at trace
+    # time — the XLA analogue of the paper's runtime-compiled meta-kernel.
+    for kind, a_idx, b_idx, field_size in program:
+        a = cols[a_idx]
+        if kind == "cross":
+            h = _fmix32(a * _GOLDEN + _fmix32(cols[b_idx]))
+        elif kind == "hash":
+            h = _fmix32(a)
+        elif kind == "mod":
+            h = a
+        else:  # pragma: no cover - validated in ops.py
+            raise ValueError(f"unknown op kind {kind!r}")
+        outs.append((h % np.uint32(field_size)).astype(jnp.int32))
+    out_ref[...] = jnp.stack(outs, axis=0)  # (n_ops, T)
+
+
+@functools.partial(jax.jit, static_argnames=("program", "interpret"))
+def hash_layer(cols: jax.Array, *, program: OpProgram, interpret: bool = True) -> jax.Array:
+    """Execute a layer of hash/cross ops in one kernel.
+
+    Args:
+      cols: int32[K, N] stacked input id columns.
+      program: static op tuple (see module docstring).
+    Returns:
+      int32[n_ops, N] — one output column per op.
+    """
+    k, n = cols.shape
+    n_ops = len(program)
+    n_pad = (n + ROW_TILE - 1) // ROW_TILE * ROW_TILE
+    if n_pad != n:
+        cols = jnp.pad(cols, ((0, 0), (0, n_pad - n)))
+    grid = (n_pad // ROW_TILE,)
+    out = pl.pallas_call(
+        functools.partial(_hash_layer_kernel, program=program),
+        grid=grid,
+        in_specs=[pl.BlockSpec((k, ROW_TILE), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((n_ops, ROW_TILE), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((n_ops, n_pad), jnp.int32),
+        interpret=interpret,
+    )(cols.astype(jnp.int32))
+    return out[:, :n]

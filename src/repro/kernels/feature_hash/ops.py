@@ -1,0 +1,34 @@
+"""Jitted public wrapper for the feature-hash meta-kernel."""
+
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+
+from repro.kernels.feature_hash.kernel import OpProgram, hash_layer
+from repro.kernels.feature_hash.ref import hash_layer_ref
+
+_KINDS = ("cross", "hash", "mod")
+
+
+def validate_program(program: Sequence[Tuple[str, int, int, int]], n_cols: int) -> OpProgram:
+    prog = tuple(tuple(op) for op in program)
+    for kind, a, b, m in prog:
+        if kind not in _KINDS:
+            raise ValueError(f"unknown op kind {kind!r}")
+        if not (0 <= a < n_cols) or (kind == "cross" and not (0 <= b < n_cols)):
+            raise ValueError(f"column index out of range in {(kind, a, b, m)}")
+        if m <= 0:
+            raise ValueError(f"field_size must be positive in {(kind, a, b, m)}")
+    return prog  # type: ignore[return-value]
+
+
+def run_hash_layer(cols: jax.Array, program: Sequence[Tuple[str, int, int, int]],
+                   *, use_kernel: bool = True) -> jax.Array:
+    """Run a fixed layer of hash/cross FE ops over stacked id columns."""
+    prog = validate_program(program, cols.shape[0])
+    if not use_kernel:
+        return hash_layer_ref(cols, program=prog)
+    interpret = jax.default_backend() != "tpu"
+    return hash_layer(cols, program=prog, interpret=interpret)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the feature-hash meta-kernel (shares repro.fe.ops)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fe.ops import fmix32, hash_combine
+
+
+def hash_layer_ref(cols: jax.Array, *, program) -> jax.Array:
+    outs = []
+    for kind, a_idx, b_idx, field_size in program:
+        a = cols[a_idx]
+        if kind == "cross":
+            h = hash_combine(a, cols[b_idx])
+        elif kind == "hash":
+            h = fmix32(a.astype(jnp.uint32))
+        elif kind == "mod":
+            h = a.astype(jnp.uint32)
+        else:
+            raise ValueError(kind)
+        outs.append((h % np.uint32(field_size)).astype(jnp.int32))
+    return jnp.stack(outs, axis=0)

@@ -1,0 +1,2 @@
+"""interaction_dot kernel package."""
+from repro.kernels.interaction_dot.ops import *  # noqa: F401,F403

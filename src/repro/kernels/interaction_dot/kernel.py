@@ -1,0 +1,69 @@
+"""Pallas TPU kernel: DLRM pairwise-dot feature interaction.
+
+The dot-interaction op (DLRM [arXiv:1906.00091]) takes the stacked field
+embeddings ``x: (B, F, D)`` (bottom-MLP output + one embedding per sparse
+field) and emits all distinct pairwise dots ``<x_i, x_j>, i<j`` — the
+feature-combination hot spot of the CTR models FeatureBox trains.
+
+Kernel layout: grid over batch tiles; per tile the (F, D) block computes
+``x @ x^T`` on the MXU, and the strictly-lower-triangular entries are
+compacted with a static gather (indices fixed at trace time). F is padded to
+the sublane multiple; D is expected 128-aligned (embed_dim in these archs is
+16..128 — ops.py pads).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+BATCH_TILE = 128
+
+
+def _tril_indices(f: int) -> np.ndarray:
+    rows, cols = np.tril_indices(f, k=-1)
+    return (rows * f + cols).astype(np.int32)
+
+
+def _interaction_kernel(idx_ref, x_ref, out_ref, *, f: int):
+    x = x_ref[...]                                    # (Bt, F, D)
+    bt = x.shape[0]
+    scores = jnp.einsum(
+        "bfd,bgd->bfg", x, x, preferred_element_type=jnp.float32
+    )                                                 # MXU batched matmul
+    flat = scores.reshape(bt, f * f)
+    out_ref[...] = jnp.take(flat, idx_ref[...], axis=1)  # triangle compaction
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dot_interaction(x: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """All pairwise dots of field embeddings.
+
+    Args:
+      x: f32[B, F, D] stacked per-field embeddings.
+    Returns:
+      f32[B, F*(F-1)/2] strictly-lower-triangle of x @ x^T per row.
+    """
+    b, f, d = x.shape
+    n_pairs = f * (f - 1) // 2
+    b_pad = (b + BATCH_TILE - 1) // BATCH_TILE * BATCH_TILE
+    if b_pad != b:
+        x = jnp.pad(x, ((0, b_pad - b), (0, 0), (0, 0)))
+    flat_idx = jnp.asarray(_tril_indices(f))
+    grid = (b_pad // BATCH_TILE,)
+    out = pl.pallas_call(
+        functools.partial(_interaction_kernel, f=f),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n_pairs,), lambda i: (0,)),
+            pl.BlockSpec((BATCH_TILE, f, d), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BATCH_TILE, n_pairs), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b_pad, n_pairs), jnp.float32),
+        interpret=interpret,
+    )(flat_idx, x.astype(jnp.float32))
+    return out[:b]

@@ -1,0 +1,20 @@
+"""Jitted public wrapper for the dot-interaction kernel."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.interaction_dot.kernel import dot_interaction
+from repro.kernels.interaction_dot.ref import dot_interaction_ref
+
+
+def pairwise_dots(x: jax.Array, *, use_kernel: bool = True) -> jax.Array:
+    """DLRM feature interaction: all <x_i, x_j>, i<j, per batch row."""
+    if x.ndim != 3:
+        raise ValueError(f"expected (B, F, D), got {x.shape}")
+    if x.shape[1] < 2:
+        raise ValueError("need at least 2 fields to interact")
+    if not use_kernel:
+        return dot_interaction_ref(x)
+    interpret = jax.default_backend() != "tpu"
+    return dot_interaction(x, interpret=interpret)

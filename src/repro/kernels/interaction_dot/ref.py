@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the DLRM dot-interaction kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dot_interaction_ref(x: jax.Array) -> jax.Array:
+    """Strictly-lower-triangle pairwise dots: f32[B, F*(F-1)/2]."""
+    b, f, d = x.shape
+    scores = jnp.einsum("bfd,bgd->bfg", x.astype(jnp.float32), x.astype(jnp.float32))
+    rows, cols = np.tril_indices(f, k=-1)
+    return scores[:, rows, cols]

@@ -1,0 +1,2 @@
+"""mempool_alloc kernel package."""
+from repro.kernels.mempool_alloc.ops import *  # noqa: F401,F403

@@ -1,0 +1,86 @@
+"""Pallas TPU kernel for Alg. 1 (in-kernel dynamic memory allocation).
+
+Paper semantics (per block of N threads):
+  1. ``prefix = parallel_prefix_sum(sizes)``             (in-block scan)
+  2. ``address = atomic_add(idle_memory_head, prefix_N)`` (one bump per block)
+  3. ``offsets_i = address + prefix_i - prefix_1``         (per-thread offsets)
+
+TPU adaptation: a Pallas grid step plays the role of a CUDA block. TPU grid
+steps execute **sequentially** on a core, so the global bump pointer is a
+scalar carried in SMEM scratch across steps — the deterministic equivalent of
+the atomic add (DESIGN.md §2). The in-block scan is a ``jnp.cumsum`` on the
+VPU over the whole tile. Sizes are aligned up to the 128-element lane width
+(the paper's 128-byte cache alignment, in TPU units).
+
+Out-of-range tail lanes (N not a multiple of the tile) are masked to size 0,
+so they consume no arena space and their offsets are harmless.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.mempool import ALIGN
+
+# One grid step scans this many allocation requests (a "block" in the paper).
+BLOCK = 1024
+
+
+def _alloc_kernel(sizes_ref, offsets_ref, head_ref, carry_ref, *, n: int, align: int):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        carry_ref[0] = 0
+
+    base = carry_ref[0]  # "idle_memory_head" before this block's bump
+
+    sizes = sizes_ref[...].astype(jnp.int32)
+    # mask tail lanes beyond n
+    lane = jax.lax.broadcasted_iota(jnp.int32, sizes.shape, 0)
+    valid = (step * BLOCK + lane) < n
+    sizes = jnp.where(valid, sizes, 0)
+
+    aligned = (sizes + (align - 1)) // align * align
+    inclusive = jnp.cumsum(aligned)
+    exclusive = inclusive - aligned          # prefix_i - prefix_1
+    offsets_ref[...] = base + exclusive      # address + (prefix_i - prefix_1)
+
+    total = inclusive[-1]                    # prefix_N
+    carry_ref[0] = base + total              # atomic_add(head, prefix_N)
+    head_ref[0] = base + total               # exposed head after this block
+
+
+@functools.partial(jax.jit, static_argnames=("align", "interpret"))
+def alloc_offsets(sizes: jax.Array, *, align: int = ALIGN, interpret: bool = True):
+    """Run Alg. 1 over ``sizes`` (int32[N]); returns (offsets int32[N], head int32[1]).
+
+    ``head[0]`` is the final ``idle_memory_head`` — total arena elements
+    consumed. Resetting the pool (paper §V) is the caller dropping this value.
+    """
+    n = sizes.shape[0]
+    n_pad = (n + BLOCK - 1) // BLOCK * BLOCK
+    if n_pad != n:
+        sizes = jnp.pad(sizes, (0, n_pad - n))
+    grid = (n_pad // BLOCK,)
+    offsets, head = pl.pallas_call(
+        functools.partial(_alloc_kernel, n=n, align=align),
+        grid=grid,
+        in_specs=[pl.BlockSpec((BLOCK,), lambda i: (i,))],
+        out_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_pad,), jnp.int32),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.SMEM((1,), jnp.int32)],
+        interpret=interpret,
+    )(sizes.astype(jnp.int32))
+    return offsets[:n], head

@@ -1,0 +1,29 @@
+"""Jitted public wrapper for the mempool allocator kernel.
+
+Selects the Pallas kernel on TPU (compiled) and interpret mode elsewhere;
+falls back to the jnp reference for shapes the kernel doesn't support.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.mempool import ALIGN
+from repro.kernels.mempool_alloc.kernel import alloc_offsets
+from repro.kernels.mempool_alloc.ref import alloc_offsets_ref
+
+
+def plan_allocation(sizes: jax.Array, *, align: int = ALIGN, use_kernel: bool = True):
+    """Plan arena offsets for a block of allocation requests.
+
+    Returns (offsets int32[N], head int32[1]). ``head`` is the post-bump
+    ``idle_memory_head``; callers compare it against pool capacity before
+    launching the consuming meta-kernel.
+    """
+    if sizes.ndim != 1:
+        raise ValueError(f"sizes must be rank-1, got {sizes.shape}")
+    if sizes.shape[0] == 0 or not use_kernel:
+        return alloc_offsets_ref(sizes, align=align)
+    interpret = jax.default_backend() != "tpu"
+    return alloc_offsets(sizes, align=align, interpret=interpret)

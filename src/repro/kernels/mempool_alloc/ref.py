@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the Alg. 1 allocator kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.mempool import ALIGN
+
+
+def alloc_offsets_ref(sizes: jax.Array, *, align: int = ALIGN):
+    """Reference allocator: exclusive scan of lane-aligned sizes.
+
+    Must agree elementwise with the Pallas kernel AND with the host
+    ``ArenaPool.alloc_block`` offsets (for a fresh pool).
+    """
+    sizes = sizes.astype(jnp.int32)
+    aligned = (sizes + (align - 1)) // align * align
+    inclusive = jnp.cumsum(aligned)
+    offsets = inclusive - aligned
+    head = inclusive[-1:] if sizes.shape[0] else jnp.zeros((1,), jnp.int32)
+    return offsets, head

@@ -1,0 +1,226 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this prints/records:
+  * ``compiled.memory_analysis()``  — proves the step fits per-device HBM;
+  * ``compiled.cost_analysis()``    — per-device HLO FLOPs / bytes accessed;
+  * collective bytes parsed from the compiled HLO text (all-gather /
+    all-reduce / reduce-scatter / all-to-all / collective-permute operand
+    sizes) — the roofline's collective term.
+
+Results land in ``results/dryrun_<mesh>.json`` for benchmarks/roofline.py.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch dlrm-mlperf --shape train_batch
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch, list_archs
+from repro.launch.mesh import make_production_mesh
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"(\w[\w.\-]*)\s*=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|pred|c64|c128)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum output-shape bytes of every collective op, per op kind.
+
+    Shapes in SPMD-partitioned HLO are per-device shard shapes, so these are
+    per-device collective bytes (matching cost_analysis granularity).
+    """
+    out: Dict[str, int] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        kind = m.group(3)
+        out[kind] = out.get(kind, 0) + _shape_bytes(m.group(2))
+    return out
+
+
+def run_cell(arch_id: str, shape: str, *, multi_pod: bool = False,
+             variant: str = "base", verbose: bool = True) -> Dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    spec = get_arch(arch_id)
+    cell = spec.build_cell(shape, mesh, variant=variant)
+    rec: Dict = {
+        "arch": arch_id, "shape": shape, "variant": variant,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": int(np.prod(list(mesh.shape.values()))),
+        "model_flops": cell.model_flops,
+    }
+    if cell.skip:
+        rec["status"] = "skipped"
+        rec["skip_reason"] = cell.skip
+        if verbose:
+            print(f"[SKIP] {arch_id} x {shape}: {cell.skip}")
+        return rec
+
+    t0 = time.time()
+    with mesh:
+        jitted = jax.jit(
+            cell.fn,
+            in_shardings=cell.in_shardings,
+            out_shardings=cell.out_shardings,
+            donate_argnums=cell.donate_argnums,
+        )
+        lowered = jitted.lower(*cell.args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    colls = collective_bytes(hlo)
+
+    # Loop-aware costs: cost_analysis() counts while bodies ONCE (a scanned
+    # 60-layer model reads as one layer). hlo_stats re-derives flops/bytes/
+    # collective bytes with known_trip_count expansion (see hlo_stats.py and
+    # tests/test_hlo_stats.py for validation against unrolled ground truth).
+    from repro.launch.hlo_stats import analyze_hlo
+    loop_aware = analyze_hlo(hlo)
+
+    # Exact per-device bytes of the model state (params + opt + batch),
+    # computed from the declared shardings — NOT subject to the CPU
+    # backend's bf16->f32 buffer promotion that inflates memory_analysis()
+    # (see EXPERIMENTS.md §Dry-run "CPU-backend inflation").
+    def _leaf_bytes(leaf, sharding):
+        n = int(np.prod(leaf.shape)) if leaf.shape else 1
+        shard = getattr(sharding, "num_devices_sharded_over", None)
+        try:
+            shard_shape = sharding.shard_shape(leaf.shape)
+            n = int(np.prod(shard_shape)) if shard_shape else 1
+        except Exception:
+            pass
+        return n * leaf.dtype.itemsize
+
+    state_bytes = 0
+    for arg, sh in zip(cell.args, cell.in_shardings):
+        leaves = jax.tree.leaves(arg)
+        shardings = jax.tree.leaves(sh, is_leaf=lambda x: hasattr(x, "shard_shape"))
+        if len(shardings) == len(leaves):
+            state_bytes += sum(_leaf_bytes(l, s) for l, s in zip(leaves, shardings))
+
+    rec.update({
+        "status": "ok",
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "hlo_flops_per_device": loop_aware.flops,
+        "hlo_bytes_per_device": loop_aware.bytes,
+        "collective_bytes_per_device": {k: int(v) for k, v in
+                                        loop_aware.collective.items()},
+        "collective_total_bytes": int(loop_aware.collective_total),
+        "raw_cost_analysis": {            # loop bodies counted once (XLA)
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0)),
+            "collective_bytes_text_scan": int(sum(colls.values())),
+        },
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "peak_estimate_bytes": (ma.argument_size_in_bytes
+                                    + ma.output_size_in_bytes
+                                    + ma.temp_size_in_bytes
+                                    - ma.alias_size_in_bytes),
+            "state_bytes_exact": state_bytes,
+        },
+    })
+    if verbose:
+        print(f"[OK] {arch_id} x {shape} ({rec['mesh']}, {variant}) "
+              f"lower={t_lower:.1f}s compile={t_compile:.1f}s")
+        print(f"     memory_analysis: args={ma.argument_size_in_bytes/2**30:.2f}GiB "
+              f"temp={ma.temp_size_in_bytes/2**30:.2f}GiB "
+              f"out={ma.output_size_in_bytes/2**30:.2f}GiB "
+              f"(peak~{rec['memory']['peak_estimate_bytes']/2**30:.2f}GiB/device)")
+        print(f"     cost_analysis: flops/dev={rec['hlo_flops_per_device']:.3e} "
+              f"bytes/dev={rec['hlo_bytes_per_device']:.3e}")
+        print(f"     collectives/dev: { {k: f'{v/2**20:.1f}MiB' for k, v in colls.items()} }")
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="architecture id (or --all)")
+    ap.add_argument("--shape", default=None, help="shape name (default: all)")
+    ap.add_argument("--all", action="store_true", help="run every arch x shape")
+    ap.add_argument("--multi-pod", action="store_true", help="2x16x16 mesh")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--variant", default="base")
+    ap.add_argument("--out", default=None, help="output JSON path")
+    args = ap.parse_args()
+
+    if args.all:
+        targets = [(a, s) for a in list_archs() for s in get_arch(a).shapes]
+    else:
+        if not args.arch:
+            ap.error("--arch or --all required")
+        shapes = [args.shape] if args.shape else list(get_arch(args.arch).shapes)
+        targets = [(args.arch, s) for s in shapes]
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    records = []
+    failures = 0
+    for multi_pod in meshes:
+        for arch_id, shape in targets:
+            try:
+                records.append(run_cell(arch_id, shape, multi_pod=multi_pod,
+                                        variant=args.variant))
+            except Exception as e:  # noqa: BLE001 — record and continue
+                failures += 1
+                traceback.print_exc()
+                records.append({
+                    "arch": arch_id, "shape": shape,
+                    "mesh": "2x16x16" if multi_pod else "16x16",
+                    "variant": args.variant,
+                    "status": "error", "error": f"{type(e).__name__}: {e}",
+                })
+    out = args.out or (
+        f"results/dryrun_{'multi' if args.multi_pod or args.both_meshes else 'single'}"
+        f"_{args.variant}.json")
+    os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(records, f, indent=1)
+    ok = sum(1 for r in records if r["status"] == "ok")
+    skipped = sum(1 for r in records if r["status"] == "skipped")
+    print(f"\n== dry-run summary: {ok} ok, {skipped} skipped, {failures} failed "
+          f"-> {out}")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

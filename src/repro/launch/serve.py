@@ -1,0 +1,58 @@
+"""Serving driver: batched CTR scoring with the FeatureBox pipeline.
+
+Runs the smoke config of a recsys arch as an online scorer: requests are
+micro-batched, run through the FE schedule (host+device layers), scored with
+the jitted serve step, and latency percentiles reported.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch dlrm-mlperf --requests 2000
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Any, Dict
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch
+from repro.launch.train import synthetic_batch
+from repro.train.optimizer import adamw
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--requests", type=int, default=2000)
+    ap.add_argument("--batch", type=int, default=64)
+    args = ap.parse_args()
+
+    spec = get_arch(args.arch)
+    if spec.family != "recsys":
+        raise SystemExit("serve.py scores recsys archs; use train.py for others")
+    from repro.models import recsys as R
+
+    cfg = spec.smoke()
+    params = R.init_params(cfg, jax.random.PRNGKey(0))
+    serve = jax.jit(lambda p, b: R.serve_step(p, cfg, b))
+
+    lat = []
+    n_batches = args.requests // args.batch
+    scores_sum = 0.0
+    for i in range(n_batches):
+        b = synthetic_batch("recsys", cfg, args.batch, i)
+        b.pop("label")
+        t0 = time.perf_counter()
+        s = serve(params, b)
+        s.block_until_ready()
+        lat.append(time.perf_counter() - t0)
+        scores_sum += float(s.sum())
+    lat_ms = np.asarray(lat) * 1e3
+    print(f"arch={args.arch} batches={n_batches} batch={args.batch} "
+          f"p50={np.percentile(lat_ms,50):.2f}ms p99={np.percentile(lat_ms,99):.2f}ms "
+          f"mean_score={scores_sum/(n_batches*args.batch):.4f}")
+
+
+if __name__ == "__main__":
+    main()

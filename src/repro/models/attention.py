@@ -1,0 +1,431 @@
+"""Attention: GQA + MLA (DeepSeek-V2), RoPE, chunked flash, KV-cache decode.
+
+Memory discipline is the point here: prefill at 32k never materializes an
+(S, S) score matrix — ``flash_attention`` scans KV blocks with running
+max/denominator (online softmax), so peak live memory per (batch, head) is
+O(q_block * kv_block). Decode paths read the cache once per token.
+
+MLA (Multi-head Latent Attention, DeepSeek-V2 [arXiv:2405.04434]) stores only
+the compressed latent ``c_kv`` (kv_lora_rank) + shared rope key per token; the
+decode path scores against the latent directly via weight absorption, so the
+32k cache is ~(512+64) per token instead of 2*H*Dh.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import dense
+
+NEG_INF = -1e30
+
+
+# ------------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, *, base: float = 10000.0) -> np.ndarray:
+    return 1.0 / (base ** (np.arange(0, head_dim, 2, dtype=np.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, *, base: float = 10000.0) -> jax.Array:
+    """Rotary embedding. x: (..., S, H, Dh); positions: int (..., S) or (S,)."""
+    dh = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(dh, base=base))
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, Dh/2)
+    cos = jnp.cos(angles)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------- chunked flash attention
+#
+# Forward: online-softmax over kv blocks (never materializes (S, S)).
+# Backward: custom VJP that RECOMPUTES scores blockwise from the saved
+# (q, k, v, out, lse) — without it, jax's scan-transpose stacks every
+# block's probabilities as residuals, i.e. O(S^2) HBM traffic per layer
+# (measured: 25 TB/device/step on qwen-32b train_4k; see EXPERIMENTS §Perf).
+
+
+def _flash_fwd_padded(q, k, v, causal, q_block, kv_block, s_orig):
+    """Core forward on padded arrays. Returns out and per-query lse.
+
+    q: (B, Sq, H, Dh); k: (B, Skv, Hk, Dh); v: (B, Skv, Hk, Dv).
+    out: (B, Sq, H, Dv); lse: (B, Hk, G, Sq) float32.
+    """
+    b, s_pad, h, dh = q.shape
+    skv_pad = k.shape[1]
+    hk = k.shape[2]
+    dv = v.shape[-1]
+    g = h // hk
+    scale = 1.0 / np.sqrt(dh)
+    nq, nkv = s_pad // q_block, skv_pad // kv_block
+    qr = q.reshape(b, nq, q_block, hk, g, dh)
+    kr = k.reshape(b, nkv, kv_block, hk, dh)
+    vr = v.reshape(b, nkv, kv_block, hk, dv)
+    kv_pos = jnp.arange(skv_pad).reshape(nkv, kv_block)
+    q_pos = jnp.arange(s_pad).reshape(nq, q_block)
+
+    def per_qblock(qi):
+        qb = qr[:, qi]
+
+        def body(carry, kv_i):
+            m, l, acc = carry
+            kb, vb = kr[:, kv_i], vr[:, kv_i]
+            scores = jnp.einsum(
+                "bqhgd,bkhd->bhgqk", qb, kb, preferred_element_type=jnp.float32
+            ) * scale
+            mask = (kv_pos[kv_i][None, :] <= q_pos[qi][:, None]) if causal else (
+                jnp.ones((q_block, kv_block), bool))
+            mask = mask & (kv_pos[kv_i] < s_orig)[None, :]
+            scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+            m_new = jnp.maximum(m, scores.max(axis=-1))
+            p = jnp.exp(scores - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p, vb.astype(jnp.float32))
+            if causal:
+                keep = (kv_i * kv_block) <= qi * q_block + (q_block - 1)
+                m_new, l_new, acc_new = jax.tree.map(
+                    lambda n, o: jnp.where(keep, n, o),
+                    (m_new, l_new, acc_new), (m, l, acc))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hk, g, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hk, g, q_block), jnp.float32)
+        a0 = jnp.zeros((b, hk, g, q_block, dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), jnp.arange(nkv))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))
+        return out, lse  # (B,Hk,G,Qb,Dv), (B,Hk,G,Qb)
+
+    outs, lses = jax.lax.map(per_qblock, jnp.arange(nq))
+    out = jnp.moveaxis(outs, 0, 3).reshape(b, hk, g, s_pad, dv)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, s_pad, h, dv).astype(q.dtype)
+    lse = jnp.moveaxis(lses, 0, 3).reshape(b, hk, g, s_pad)
+    return out, lse
+
+
+def _flash_bwd_padded(q, k, v, out, lse, dout, causal, q_block, kv_block, s_orig):
+    """Blockwise-recompute backward (FlashAttention-style)."""
+    b, s_pad, h, dh = q.shape
+    skv_pad = k.shape[1]
+    hk = k.shape[2]
+    dv = v.shape[-1]
+    g = h // hk
+    scale = 1.0 / np.sqrt(dh)
+    nq, nkv = s_pad // q_block, skv_pad // kv_block
+    qr = q.reshape(b, nq, q_block, hk, g, dh)
+    kr = k.reshape(b, nkv, kv_block, hk, dh)
+    vr = v.reshape(b, nkv, kv_block, hk, dv)
+    do = dout.reshape(b, nq, q_block, hk, g, dv)
+    o = out.reshape(b, nq, q_block, hk, g, dv)
+    lse_r = lse.reshape(b, hk, g, nq, q_block)
+    kv_pos = jnp.arange(skv_pad).reshape(nkv, kv_block)
+    q_pos = jnp.arange(s_pad).reshape(nq, q_block)
+
+    def per_qblock(carry, qi):
+        dk_full, dv_full = carry
+        qb = qr[:, qi].astype(jnp.float32)               # (B,Qb,Hk,G,Dh)
+        dob = do[:, qi].astype(jnp.float32)
+        ob = o[:, qi].astype(jnp.float32)
+        lse_b = lse_r[:, :, :, qi]                       # (B,Hk,G,Qb)
+        delta = jnp.einsum("bqhgd,bqhgd->bhgq", dob, ob)  # rowsum(do*o)
+
+        def kv_body(carry_q, kv_i):
+            dq_acc, dk_full, dv_full = carry_q
+            kb = kr[:, kv_i].astype(jnp.float32)
+            vb = vr[:, kv_i].astype(jnp.float32)
+            scores = jnp.einsum("bqhgd,bkhd->bhgqk", qb, kb) * scale
+            mask = (kv_pos[kv_i][None, :] <= q_pos[qi][:, None]) if causal else (
+                jnp.ones((q_block, kv_block), bool))
+            mask = mask & (kv_pos[kv_i] < s_orig)[None, :]
+            scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+            p = jnp.exp(scores - lse_b[..., None])       # normalized probs
+            dvb = jnp.einsum("bhgqk,bqhgd->bkhd", p, dob)
+            dp = jnp.einsum("bqhgd,bkhd->bhgqk", dob, vb)
+            ds = p * (dp - delta[..., None]) * scale
+            dqb = jnp.einsum("bhgqk,bkhd->bqhgd", ds, kb)
+            dkb = jnp.einsum("bhgqk,bqhgd->bkhd", ds, qb)
+            if causal:
+                keep = (kv_i * kv_block) <= qi * q_block + (q_block - 1)
+                zero = jnp.float32(0.0)
+                dqb = jnp.where(keep, dqb, zero)
+                dkb = jnp.where(keep, dkb, zero)
+                dvb = jnp.where(keep, dvb, zero)
+            dq_acc = dq_acc + dqb
+            start = kv_i * kv_block
+            dk_full = jax.lax.dynamic_update_slice_in_dim(
+                dk_full,
+                jax.lax.dynamic_slice_in_dim(dk_full, start, kv_block, 1) + dkb,
+                start, axis=1)
+            dv_full = jax.lax.dynamic_update_slice_in_dim(
+                dv_full,
+                jax.lax.dynamic_slice_in_dim(dv_full, start, kv_block, 1) + dvb,
+                start, axis=1)
+            return (dq_acc, dk_full, dv_full), None
+
+        dq0 = jnp.zeros((b, q_block, hk, g, dh), jnp.float32)
+        (dqb, dk_full, dv_full), _ = jax.lax.scan(
+            kv_body, (dq0, dk_full, dv_full), jnp.arange(nkv))
+        return (dk_full, dv_full), dqb
+
+    dk0 = jnp.zeros((b, skv_pad, hk, dh), jnp.float32)
+    dv0 = jnp.zeros((b, skv_pad, hk, dv), jnp.float32)
+    (dk, dv_), dqs = jax.lax.scan(per_qblock, (dk0, dv0), jnp.arange(nq))
+    dq = jnp.moveaxis(dqs, 0, 1).reshape(b, s_pad, h, dh)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv_.astype(v.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash_core(q, k, v, causal, q_block, kv_block, s_orig):
+    out, _ = _flash_fwd_padded(q, k, v, causal, q_block, kv_block, s_orig)
+    return out
+
+
+def _flash_core_fwd(q, k, v, causal, q_block, kv_block, s_orig):
+    out, lse = _flash_fwd_padded(q, k, v, causal, q_block, kv_block, s_orig)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_core_bwd(causal, q_block, kv_block, s_orig, res, dout):
+    q, k, v, out, lse = res
+    return _flash_bwd_padded(q, k, v, out, lse, dout,
+                             causal, q_block, kv_block, s_orig)
+
+
+_flash_core.defvjp(_flash_core_fwd, _flash_core_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "q_block", "kv_block"))
+def flash_attention(
+    q: jax.Array,  # (B, S, H, Dh)
+    k: jax.Array,  # (B, S, Hk, Dh)
+    v: jax.Array,  # (B, S, Hk, Dv)
+    *,
+    causal: bool = True,
+    q_block: int = 512,
+    kv_block: int = 512,
+) -> jax.Array:
+    """Online-softmax attention with GQA head grouping, O(S) memory in S —
+    in BOTH directions (custom VJP recomputes scores blockwise)."""
+    b, s, h, dh = q.shape
+    assert h % k.shape[2] == 0, (h, k.shape[2])
+
+    s_pad = (s + q_block - 1) // q_block * q_block
+    if s_pad != s:
+        q = jnp.pad(q, ((0, 0), (0, s_pad - s), (0, 0), (0, 0)))
+    skv_pad = (s + kv_block - 1) // kv_block * kv_block
+    if skv_pad != s:
+        k = jnp.pad(k, ((0, 0), (0, skv_pad - s), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, skv_pad - s), (0, 0), (0, 0)))
+    out = _flash_core(q, k, v, causal, q_block, kv_block, s)
+    return out[:, :s]
+
+
+def attention_ref(q, k, v, *, causal=True):
+    """Quadratic oracle for flash_attention (tests only)."""
+    b, s, h, dh = q.shape
+    hk = k.shape[2]
+    dv = v.shape[-1]
+    g = h // hk
+    qr = q.reshape(b, s, hk, g, dh).astype(jnp.float32)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qr, k.astype(jnp.float32))
+    scores = scores / np.sqrt(dh)
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(b, s, h, dv).astype(q.dtype)
+
+
+# --------------------------------------------------------------- GQA block
+def gqa_params_shape(d_model: int, n_heads: int, n_kv: int, head_dim: int,
+                     *, qkv_bias: bool) -> Dict[str, Tuple[int, ...]]:
+    shapes = {
+        "wq": (d_model, n_heads * head_dim),
+        "wk": (d_model, n_kv * head_dim),
+        "wv": (d_model, n_kv * head_dim),
+        "wo": (n_heads * head_dim, d_model),
+    }
+    if qkv_bias:
+        shapes.update({
+            "bq": (n_heads * head_dim,),
+            "bk": (n_kv * head_dim,),
+            "bv": (n_kv * head_dim,),
+        })
+    return shapes
+
+
+def gqa_attention(
+    p: Dict[str, jax.Array],
+    x: jax.Array,                    # (B, S, D)
+    *,
+    n_heads: int,
+    n_kv: int,
+    head_dim: int,
+    positions: Optional[jax.Array] = None,
+    rope_base: float = 10000.0,
+    causal: bool = True,
+    q_block: int = 512,
+    kv_block: int = 512,
+    head_constraint=None,            # shard heads explicitly (SPMD hint)
+) -> jax.Array:
+    b, s, _ = x.shape
+    pos = positions if positions is not None else jnp.arange(s)
+    q = dense(x, p["wq"], p.get("bq")).reshape(b, s, n_heads, head_dim)
+    k = dense(x, p["wk"], p.get("bk")).reshape(b, s, n_kv, head_dim)
+    v = dense(x, p["wv"], p.get("bv")).reshape(b, s, n_kv, head_dim)
+    q = apply_rope(q, pos, base=rope_base)
+    k = apply_rope(k, pos, base=rope_base)
+    if head_constraint is not None:
+        # without this, sharding propagation through the custom-VJP reshapes
+        # replicates attention activations over 'model' and all-reduces them
+        # (measured 2.3 TB/device/step on yi-9b — EXPERIMENTS.md §Perf)
+        q = head_constraint(q)
+    out = flash_attention(q, k, v, causal=causal, q_block=q_block, kv_block=kv_block)
+    if head_constraint is not None:
+        out = head_constraint(out)
+    return dense(out.reshape(b, s, n_heads * head_dim), p["wo"])
+
+
+def gqa_decode_step(
+    p: Dict[str, jax.Array],
+    x: jax.Array,                    # (B, 1, D) current token
+    cache_k: jax.Array,              # (B, S_cache, Hk, Dh)
+    cache_v: jax.Array,
+    cache_len: jax.Array,            # int32[] valid cache length
+    *,
+    n_heads: int,
+    n_kv: int,
+    head_dim: int,
+    rope_base: float = 10000.0,
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """One decode step against a fixed-size cache; returns (out, new kv)."""
+    b = x.shape[0]
+    s_cache = cache_k.shape[1]
+    pos = cache_len[None]  # current position
+    q = dense(x, p["wq"], p.get("bq")).reshape(b, 1, n_heads, head_dim)
+    k_new = dense(x, p["wk"], p.get("bk")).reshape(b, 1, n_kv, head_dim)
+    v_new = dense(x, p["wv"], p.get("bv")).reshape(b, 1, n_kv, head_dim)
+    q = apply_rope(q, pos, base=rope_base)
+    k_new = apply_rope(k_new, pos, base=rope_base)
+    k = jax.lax.dynamic_update_slice_in_dim(cache_k, k_new.astype(cache_k.dtype), cache_len, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache_v, v_new.astype(cache_v.dtype), cache_len, axis=1)
+
+    g = n_heads // n_kv
+    qr = q.reshape(b, n_kv, g, head_dim)
+    scores = jnp.einsum("bhgd,bshd->bhgs", qr.astype(jnp.float32),
+                        k.astype(jnp.float32)) / np.sqrt(head_dim)
+    valid = jnp.arange(s_cache) <= cache_len
+    scores = jnp.where(valid[None, None, None], scores, NEG_INF)
+    pa = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhgs,bshd->bhgd", pa, k_v_cast(v))
+    out = dense(ctx.reshape(b, 1, n_heads * head_dim).astype(x.dtype), p["wo"])
+    return out, (k, v)
+
+
+def k_v_cast(v):
+    return v.astype(jnp.float32)
+
+
+# --------------------------------------------------------------- MLA block
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    d_model: int
+    n_heads: int
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+
+
+def mla_params_shape(c: MLAConfig) -> Dict[str, Tuple[int, ...]]:
+    h = c.n_heads
+    return {
+        "wdq": (c.d_model, c.q_lora_rank),
+        "wuq": (c.q_lora_rank, h * (c.qk_nope_dim + c.qk_rope_dim)),
+        "wdkv": (c.d_model, c.kv_lora_rank),
+        "wkrope": (c.d_model, c.qk_rope_dim),
+        "wuk": (c.kv_lora_rank, h * c.qk_nope_dim),
+        "wuv": (c.kv_lora_rank, h * c.v_head_dim),
+        "wo": (h * c.v_head_dim, c.d_model),
+    }
+
+
+def mla_attention(p: Dict[str, jax.Array], x: jax.Array, c: MLAConfig,
+                  *, positions: Optional[jax.Array] = None,
+                  causal: bool = True, q_block: int = 512, kv_block: int = 512,
+                  head_constraint=None) -> jax.Array:
+    """Train/prefill MLA: reconstruct per-head K/V from the latent, flash attn."""
+    b, s, _ = x.shape
+    h = c.n_heads
+    pos = positions if positions is not None else jnp.arange(s)
+    q = dense(dense(x, p["wdq"]), p["wuq"]).reshape(b, s, h, c.qk_nope_dim + c.qk_rope_dim)
+    q_nope, q_rope = q[..., : c.qk_nope_dim], q[..., c.qk_nope_dim:]
+    q_rope = apply_rope(q_rope, pos)
+    c_kv = dense(x, p["wdkv"])                               # (B,S,R)
+    k_rope = apply_rope(dense(x, p["wkrope"])[:, :, None, :], pos)  # (B,S,1,rope)
+    k_nope = dense(c_kv, p["wuk"]).reshape(b, s, h, c.qk_nope_dim)
+    v = dense(c_kv, p["wuv"]).reshape(b, s, h, c.v_head_dim)
+    qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+    kf = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (b, s, h, c.qk_rope_dim))], axis=-1)
+    if head_constraint is not None:
+        qf, kf, v = head_constraint(qf), head_constraint(kf), head_constraint(v)
+    out = flash_attention(qf, kf, v, causal=causal, q_block=q_block, kv_block=kv_block)
+    if head_constraint is not None:
+        out = head_constraint(out)
+    return dense(out.reshape(b, s, h * c.v_head_dim), p["wo"])
+
+
+def mla_decode_step(
+    p: Dict[str, jax.Array],
+    x: jax.Array,            # (B, 1, D)
+    cache_ckv: jax.Array,    # (B, S_cache, R) latent cache
+    cache_krope: jax.Array,  # (B, S_cache, rope_dim)
+    cache_len: jax.Array,
+    c: MLAConfig,
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Decode against the COMPRESSED cache via weight absorption.
+
+    score = q_nope^T W_uk c + q_rope^T k_rope ; ctx = softmax . c ; v = ctx W_uv
+    — the per-token cache is kv_lora_rank + rope_dim elements, the MLA win.
+    """
+    b = x.shape[0]
+    h = c.n_heads
+    s_cache = cache_ckv.shape[1]
+    pos = cache_len[None]
+    q = dense(dense(x, p["wdq"]), p["wuq"]).reshape(b, h, c.qk_nope_dim + c.qk_rope_dim)
+    q_nope, q_rope = q[..., : c.qk_nope_dim], q[..., c.qk_nope_dim:]
+    q_rope = apply_rope(q_rope[:, None], pos, base=10000.0)[:, 0]  # treat heads dim as head axis
+    ckv_new = dense(x, p["wdkv"])[:, 0]                        # (B,R)
+    krope_new = apply_rope(dense(x, p["wkrope"])[:, :, None, :], pos)[:, 0, 0]  # (B,rope)
+    ckv = jax.lax.dynamic_update_slice_in_dim(
+        cache_ckv, ckv_new[:, None].astype(cache_ckv.dtype), cache_len, axis=1)
+    krope = jax.lax.dynamic_update_slice_in_dim(
+        cache_krope, krope_new[:, None].astype(cache_krope.dtype), cache_len, axis=1)
+
+    # absorb W_uk into the query: q_c (B, H, R)
+    wuk = p["wuk"].reshape(c.kv_lora_rank, h, c.qk_nope_dim)
+    q_c = jnp.einsum("bhd,rhd->bhr", q_nope.astype(jnp.float32),
+                     wuk.astype(jnp.float32))
+    scores = jnp.einsum("bhr,bsr->bhs", q_c, ckv.astype(jnp.float32))
+    scores = scores + jnp.einsum("bhd,bsd->bhs", q_rope.astype(jnp.float32),
+                                 krope.astype(jnp.float32))
+    scores = scores / np.sqrt(c.qk_nope_dim + c.qk_rope_dim)
+    valid = jnp.arange(s_cache) <= cache_len
+    scores = jnp.where(valid[None, None], scores, NEG_INF)
+    pa = jax.nn.softmax(scores, axis=-1)
+    ctx_c = jnp.einsum("bhs,bsr->bhr", pa, ckv.astype(jnp.float32))  # latent ctx
+    wuv = p["wuv"].reshape(c.kv_lora_rank, h, c.v_head_dim)
+    ctx = jnp.einsum("bhr,rhd->bhd", ctx_c, wuv.astype(jnp.float32))
+    out = dense(ctx.reshape(b, 1, h * c.v_head_dim).astype(x.dtype), p["wo"])
+    return out, (ckv, krope)

@@ -1,0 +1,91 @@
+"""Common model layers and initializers (pure-jnp, pytree params)."""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Dict[str, Any]
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, *, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32)).astype(dtype)
+
+
+def layer_norm(x: jax.Array, weight: jax.Array, bias: jax.Array,
+               *, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+def dense(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None) -> jax.Array:
+    y = jnp.einsum("...d,df->...f", x, w.astype(x.dtype))
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+def swiglu(x: jax.Array, w1: jax.Array, w3: jax.Array, w2: jax.Array) -> jax.Array:
+    """SwiGLU FFN: (silu(x@w1) * (x@w3)) @ w2."""
+    h = jax.nn.silu(dense(x, w1)) * dense(x, w3)
+    return dense(h, w2)
+
+
+def mlp(x: jax.Array, ws, bs, *, act=jax.nn.relu, final_act=None) -> jax.Array:
+    """Plain MLP over lists of weights/biases (recsys towers)."""
+    for i, (w, b) in enumerate(zip(ws, bs)):
+        x = dense(x, w, b)
+        if i < len(ws) - 1:
+            x = act(x)
+        elif final_act is not None:
+            x = final_act(x)
+    return x
+
+
+# ------------------------------------------------------------------- inits
+def he_init(key, shape, dtype=jnp.float32):
+    fan_in = shape[0] if len(shape) >= 1 else 1
+    return jax.random.normal(key, shape, dtype) * np.sqrt(2.0 / max(fan_in, 1))
+
+
+def glorot_init(key, shape, dtype=jnp.float32):
+    fan_in, fan_out = shape[0], shape[-1]
+    lim = np.sqrt(6.0 / (fan_in + fan_out))
+    return jax.random.uniform(key, shape, dtype, -lim, lim)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return jax.random.normal(key, shape, dtype) * 0.02
+
+
+def keygen(key):
+    """Infinite key splitter."""
+    while True:
+        key, sub = jax.random.split(key)
+        yield sub
+
+
+def sigmoid_bce(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Numerically-stable binary cross entropy from logits (CTR loss)."""
+    logits = logits.astype(jnp.float32)
+    labels = labels.astype(jnp.float32)
+    return jnp.maximum(logits, 0) - logits * labels + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Per-token CE from integer labels; logits f[*, V], labels int[*]."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return lse - gold

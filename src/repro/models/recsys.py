@@ -1,0 +1,472 @@
+"""CTR/recsys models on the embedding substrate: DLRM, DCN-v2, AutoInt, BST.
+
+These are the paper's own workload class (FeatureBox trains CTR models with
+10^12-dim sparse inputs on a hierarchical GPU parameter server). All four
+share:
+
+* one packed :class:`~repro.embedding.table.MultiTable` for all sparse fields
+  (rows sharded over the flattened ('data','model') axes at scale);
+* ``lookup_dedup`` (the working-set path) or plain ``lookup`` — switchable so
+  §Perf can measure the dedup win;
+* sigmoid BCE training, batched serving, and a vectorized 10^6-candidate
+  retrieval scorer (batched dot, not a loop).
+
+The DLRM pairwise-dot interaction has a Pallas kernel
+(``kernels/interaction_dot``) used on TPU; under dry-run/pjit the pure-jnp
+form (same math) lowers through XLA.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.embedding.table import MultiTable, TableSpec, lookup, lookup_dedup
+from repro.models.common import (
+    dense as dense_layer,
+    embed_init,
+    glorot_init,
+    he_init,
+    layer_norm,
+    mlp,
+    sigmoid_bce,
+)
+
+Params = Dict[str, Any]
+
+# MLPerf DLRM (Criteo 1TB) per-field vocabulary sizes [arXiv:1906.00091].
+CRITEO_1TB_VOCABS: Tuple[int, ...] = (
+    39884406, 39043, 17289, 7420, 20263, 3, 7120, 1543, 63, 38532951,
+    2953546, 403346, 10, 2208, 11938, 155, 4, 976, 14, 39979771,
+    25641295, 39664984, 585935, 12972, 108, 36,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class RecsysConfig:
+    name: str
+    kind: str                       # "dlrm" | "dcnv2" | "autoint" | "bst"
+    n_dense: int
+    n_sparse: int
+    embed_dim: int
+    vocab_sizes: Tuple[int, ...]
+    bot_mlp: Tuple[int, ...] = ()
+    top_mlp: Tuple[int, ...] = ()
+    n_cross_layers: int = 0
+    n_attn_layers: int = 0
+    n_heads: int = 0
+    d_attn: int = 0
+    seq_len: int = 0                # BST behavior-sequence length
+    n_blocks: int = 0               # BST transformer blocks
+    dtype: Any = jnp.float32
+    dedup_lookup: bool = True       # FeatureBox working-set path
+    dedup_capacity: int = 0         # 0 -> batch*fields (safe upper bound)
+    # which sparse field holds the candidate item (retrieval scoring)
+    item_field: int = 0
+    # physical row padding so the packed table shards evenly on any mesh
+    row_align: int = 512
+
+    def multi_table(self) -> MultiTable:
+        specs = [TableSpec(f"f{i}", v, self.embed_dim)
+                 for i, v in enumerate(self.vocab_sizes)]
+        return MultiTable.build(specs)
+
+    @property
+    def padded_rows(self) -> int:
+        rows = self.multi_table().total_rows
+        return (rows + self.row_align - 1) // self.row_align * self.row_align
+
+
+# ------------------------------------------------------------------ params
+def _mlp_shapes(dims: Sequence[int], d_in: int, prefix: str) -> Dict[str, Tuple[int, ...]]:
+    shapes = {}
+    prev = d_in
+    for i, d in enumerate(dims):
+        shapes[f"{prefix}_w{i}"] = (prev, d)
+        shapes[f"{prefix}_b{i}"] = (d,)
+        prev = d
+    return shapes
+
+
+def param_shapes(c: RecsysConfig) -> Dict[str, Tuple[int, ...]]:
+    shapes: Dict[str, Tuple[int, ...]] = {"embed": (c.padded_rows, c.embed_dim)}
+    if c.kind == "dlrm":
+        shapes.update(_mlp_shapes(c.bot_mlp, c.n_dense, "bot"))
+        n_fields = c.n_sparse + 1
+        d_inter = n_fields * (n_fields - 1) // 2 + c.bot_mlp[-1]
+        shapes.update(_mlp_shapes(c.top_mlp, d_inter, "top"))
+    elif c.kind == "dcnv2":
+        d0 = c.n_dense + c.n_sparse * c.embed_dim
+        for i in range(c.n_cross_layers):
+            shapes[f"cross_w{i}"] = (d0, d0)
+            shapes[f"cross_b{i}"] = (d0,)
+        shapes.update(_mlp_shapes(tuple(c.top_mlp) + (1,), d0, "deep"))
+    elif c.kind == "autoint":
+        d = c.embed_dim
+        for i in range(c.n_attn_layers):
+            d_out = c.d_attn * c.n_heads
+            shapes[f"attn{i}_wq"] = (d, d_out)
+            shapes[f"attn{i}_wk"] = (d, d_out)
+            shapes[f"attn{i}_wv"] = (d, d_out)
+            shapes[f"attn{i}_wres"] = (d, d_out)
+            d = d_out
+        shapes["out_w"] = (c.n_sparse * d, 1)
+        shapes["out_b"] = (1,)
+    elif c.kind == "bst":
+        d = c.embed_dim
+        shapes["pos_embed"] = (c.seq_len + 1, d)
+        for i in range(c.n_blocks):
+            shapes[f"blk{i}_wq"] = (d, d)
+            shapes[f"blk{i}_wk"] = (d, d)
+            shapes[f"blk{i}_wv"] = (d, d)
+            shapes[f"blk{i}_wo"] = (d, d)
+            shapes[f"blk{i}_ln1_w"] = (d,)
+            shapes[f"blk{i}_ln1_b"] = (d,)
+            shapes[f"blk{i}_ffn_w1"] = (d, 4 * d)
+            shapes[f"blk{i}_ffn_b1"] = (4 * d,)
+            shapes[f"blk{i}_ffn_w2"] = (4 * d, d)
+            shapes[f"blk{i}_ffn_b2"] = (d,)
+            shapes[f"blk{i}_ln2_w"] = (d,)
+            shapes[f"blk{i}_ln2_b"] = (d,)
+        d_in = (c.seq_len + 1) * d + (c.n_sparse - 1) * d
+        shapes.update(_mlp_shapes(tuple(c.top_mlp) + (1,), d_in, "top"))
+    else:
+        raise ValueError(f"unknown recsys kind {c.kind!r}")
+    return shapes
+
+
+def abstract_params(c: RecsysConfig) -> Params:
+    return {k: jax.ShapeDtypeStruct(s, c.dtype) for k, s in param_shapes(c).items()}
+
+
+def init_params(c: RecsysConfig, key: jax.Array) -> Params:
+    params: Params = {}
+    for i, (name, shape) in enumerate(param_shapes(c).items()):
+        k = jax.random.fold_in(key, i)
+        if name == "embed":
+            scale = 1.0 / np.sqrt(c.embed_dim)
+            params[name] = jax.random.uniform(k, shape, c.dtype, -scale, scale)
+        elif name.endswith(tuple(f"_b{j}" for j in range(10))) or name.endswith("_b"):
+            params[name] = jnp.zeros(shape, c.dtype)
+        elif "ln" in name and name.endswith("_w"):
+            params[name] = jnp.ones(shape, c.dtype)
+        elif "ln" in name and name.endswith("_b"):
+            params[name] = jnp.zeros(shape, c.dtype)
+        elif len(shape) == 1:
+            params[name] = jnp.zeros(shape, c.dtype)
+        else:
+            params[name] = he_init(k, shape, c.dtype)
+    return params
+
+
+def param_specs(c: RecsysConfig, *, dp: Tuple[str, ...] = ("data",), tp: str = "model"):
+    """Embedding rows sharded over every device; small dense nets replicated."""
+    specs = {}
+    for name, shape in param_shapes(c).items():
+        if name == "embed":
+            specs[name] = P(dp + (tp,), None)
+        else:
+            specs[name] = P(*(None,) * len(shape))
+    return specs
+
+
+# ----------------------------------------------------------------- lookups
+def collect_gids(c: RecsysConfig, batch: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+    """All packed global row ids this batch will look up, keyed by site.
+
+    Shared by the in-graph lookup paths and by the sparse working-set train
+    step (which gathers the working set OUTSIDE the differentiated region —
+    the hierarchical-PS training scheme of [37]/FeatureBox).
+    """
+    mt = c.multi_table()
+    gids: Dict[str, jax.Array] = {}
+    if c.kind == "bst":
+        seq_plus = jnp.concatenate(
+            [batch["seq"], batch["sparse"][:, c.item_field][:, None]], axis=1)
+        gids["seq"] = seq_plus.astype(jnp.int32) + int(mt.offsets[c.item_field])
+        other = jnp.delete(batch["sparse"], c.item_field, axis=1,
+                           assume_unique_indices=True)
+        other_offs = jnp.asarray(
+            np.delete(np.asarray(mt.offsets), c.item_field), jnp.int32)
+        gids["other"] = other.astype(jnp.int32) + other_offs[None, :]
+    else:
+        gids["sparse"] = mt.global_ids(batch["sparse"])
+    return gids
+
+
+def _embed_fields(params: Params, c: RecsysConfig, field_ids: jax.Array,
+                  mt: MultiTable) -> jax.Array:
+    """(B, F) per-field ids -> (B, F, D) rows via packed global ids."""
+    gids = mt.global_ids(field_ids)
+    if c.dedup_lookup:
+        cap = c.dedup_capacity or int(np.prod(gids.shape))
+        return lookup_dedup(params["embed"], gids, capacity=cap)
+    return lookup(params["embed"], gids)
+
+
+# ----------------------------------------------------------------- forward
+def _dlrm_forward(params, c, batch, mt):
+    dense_x = batch["dense"].astype(c.dtype)
+    emb = batch.get("_rows_sparse")
+    if emb is None:
+        emb = _embed_fields(params, c, batch["sparse"], mt)      # (B, F, D)
+    n_bot = len(c.bot_mlp)
+    bot = mlp(dense_x,
+              [params[f"bot_w{i}"] for i in range(n_bot)],
+              [params[f"bot_b{i}"] for i in range(n_bot)],
+              act=jax.nn.relu, final_act=jax.nn.relu)            # (B, D)
+    fields = jnp.concatenate([bot[:, None, :], emb], axis=1)     # (B, F+1, D)
+    f = fields.shape[1]
+    scores = jnp.einsum("bfd,bgd->bfg", fields, fields)
+    rows, cols = np.tril_indices(f, k=-1)
+    inter = scores[:, rows, cols]                                # (B, P)
+    top_in = jnp.concatenate([bot, inter], axis=1)
+    n_top = len(c.top_mlp)
+    logit = mlp(top_in,
+                [params[f"top_w{i}"] for i in range(n_top)],
+                [params[f"top_b{i}"] for i in range(n_top)])
+    return logit[:, 0]
+
+
+def _dcnv2_forward(params, c, batch, mt):
+    emb = batch.get("_rows_sparse")
+    if emb is None:
+        emb = _embed_fields(params, c, batch["sparse"], mt)
+    b = emb.shape[0]
+    x0 = jnp.concatenate([batch["dense"].astype(c.dtype), emb.reshape(b, -1)], axis=1)
+    x = x0
+    for i in range(c.n_cross_layers):
+        xw = dense_layer(x, params[f"cross_w{i}"], params[f"cross_b{i}"])
+        x = x0 * xw + x                                           # DCN-v2 cross
+    n_deep = len(c.top_mlp) + 1
+    logit = mlp(x,
+                [params[f"deep_w{i}"] for i in range(n_deep)],
+                [params[f"deep_b{i}"] for i in range(n_deep)])
+    return logit[:, 0]
+
+
+def _autoint_forward(params, c, batch, mt):
+    emb = batch.get("_rows_sparse")
+    if emb is None:
+        emb = _embed_fields(params, c, batch["sparse"], mt)      # (B, F, D)
+    x = emb
+    for i in range(c.n_attn_layers):
+        q = dense_layer(x, params[f"attn{i}_wq"])
+        k = dense_layer(x, params[f"attn{i}_wk"])
+        v = dense_layer(x, params[f"attn{i}_wv"])
+        b, f, _ = q.shape
+        qh = q.reshape(b, f, c.n_heads, c.d_attn)
+        kh = k.reshape(b, f, c.n_heads, c.d_attn)
+        vh = v.reshape(b, f, c.n_heads, c.d_attn)
+        scores = jnp.einsum("bfhd,bghd->bhfg", qh, kh) / np.sqrt(c.d_attn)
+        attn = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bhfg,bghd->bfhd", attn, vh).reshape(b, f, -1)
+        x = jax.nn.relu(out + dense_layer(x, params[f"attn{i}_wres"]))
+    b = x.shape[0]
+    logit = dense_layer(x.reshape(b, -1), params["out_w"], params["out_b"])
+    return logit[:, 0]
+
+
+def _bst_forward(params, c, batch, mt):
+    # sparse field 0 = target item; remaining fields = user/context features
+    seq = batch["seq"]                                            # (B, L) item ids
+    target = batch["sparse"][:, c.item_field]
+    other = jnp.delete(batch["sparse"], c.item_field, axis=1,
+                       assume_unique_indices=True)
+    b, l = seq.shape
+    # behavior sequence + target share the item table (field 0 id space)
+    x = batch.get("_rows_seq")
+    if x is None:
+        seq_plus = jnp.concatenate([seq, target[:, None]], axis=1)  # (B, L+1)
+        gids = seq_plus.astype(jnp.int32) + int(mt.offsets[c.item_field])
+        if c.dedup_lookup:
+            cap = c.dedup_capacity or int(np.prod(gids.shape))
+            x = lookup_dedup(params["embed"], gids, capacity=cap)
+        else:
+            x = lookup(params["embed"], gids)                     # (B, L+1, D)
+    x = x.astype(c.dtype) + params["pos_embed"][None, :, :].astype(c.dtype)
+    for i in range(c.n_blocks):
+        q = dense_layer(x, params[f"blk{i}_wq"])
+        k = dense_layer(x, params[f"blk{i}_wk"])
+        v = dense_layer(x, params[f"blk{i}_wv"])
+        d_h = c.embed_dim // c.n_heads
+        qh = q.reshape(b, l + 1, c.n_heads, d_h)
+        kh = k.reshape(b, l + 1, c.n_heads, d_h)
+        vh = v.reshape(b, l + 1, c.n_heads, d_h)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", qh, kh) / np.sqrt(d_h)
+        attn = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bhqk,bkhd->bqhd", attn, vh).reshape(b, l + 1, -1)
+        h = layer_norm(x + dense_layer(out, params[f"blk{i}_wo"]),
+                       params[f"blk{i}_ln1_w"], params[f"blk{i}_ln1_b"])
+        ff = dense_layer(
+            jax.nn.relu(dense_layer(h, params[f"blk{i}_ffn_w1"], params[f"blk{i}_ffn_b1"])),
+            params[f"blk{i}_ffn_w2"], params[f"blk{i}_ffn_b2"])
+        x = layer_norm(h + ff, params[f"blk{i}_ln2_w"], params[f"blk{i}_ln2_b"])
+    other_emb = batch.get("_rows_other")
+    if other_emb is None:
+        other_offs = jnp.asarray(np.delete(np.asarray(mt.offsets), c.item_field),
+                                 jnp.int32)
+        other_gids = other.astype(jnp.int32) + other_offs[None, :]
+        if c.dedup_lookup:
+            cap = c.dedup_capacity or int(np.prod(other_gids.shape))
+            other_emb = lookup_dedup(params["embed"], other_gids, capacity=cap)
+        else:
+            other_emb = lookup(params["embed"], other_gids)       # (B, F-1, D)
+    feat = jnp.concatenate([x.reshape(b, -1), other_emb.reshape(b, -1)], axis=1)
+    n_top = len(c.top_mlp) + 1
+    logit = mlp(feat,
+                [params[f"top_w{i}"] for i in range(n_top)],
+                [params[f"top_b{i}"] for i in range(n_top)])
+    return logit[:, 0]
+
+
+_FORWARDS: Dict[str, Callable] = {
+    "dlrm": _dlrm_forward,
+    "dcnv2": _dcnv2_forward,
+    "autoint": _autoint_forward,
+    "bst": _bst_forward,
+}
+
+
+def forward(params: Params, c: RecsysConfig, batch: Dict[str, jax.Array]) -> jax.Array:
+    """Batch -> CTR logits (B,)."""
+    return _FORWARDS[c.kind](params, c, batch, c.multi_table())
+
+
+def loss_fn(params: Params, c: RecsysConfig, batch: Dict[str, jax.Array]) -> jax.Array:
+    logits = forward(params, c, batch)
+    return sigmoid_bce(logits, batch["label"]).mean()
+
+
+def make_train_step(c: RecsysConfig, optimizer):
+    """Dense train step: differentiates the whole tree (small-table path)."""
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(lambda p: loss_fn(p, c, batch))(params)
+        params, opt_state = optimizer.update(params, grads, opt_state)
+        return params, opt_state, {"loss": loss}
+    return train_step
+
+
+def make_sparse_train_step(c: RecsysConfig, dense_optimizer, *,
+                           embed_lr: float = 0.01, embed_eps: float = 1e-10,
+                           mesh=None, batch_axes=None,
+                           local_dedup_capacity: int = 0):
+    """Hierarchical-PS train step ([37]/FeatureBox): working-set embeddings.
+
+    1. dedup the batch's global ids into a fixed working set (OUTSIDE grad);
+    2. gather working rows + their Adagrad accumulators (the only table
+       traffic — proportional to unique ids, not batch x fields x dim);
+    3. differentiate w.r.t. (working rows, dense params);
+    4. Adagrad the working rows, Adam/whatever the dense params;
+    5. scatter updated rows + accumulators back.
+
+    The optimizer state carries a per-row Adagrad accumulator ``embed_accum``
+    (f32[V_total]) next to the dense optimizer's state.
+    """
+    from repro.embedding.dedup import dedup
+
+    def init(params):
+        dense_params = {k: v for k, v in params.items() if k != "embed"}
+        return {
+            "dense": dense_optimizer.init(dense_params),
+            "embed_accum": jnp.full((params["embed"].shape[0],), 0.1, jnp.float32),
+        }
+
+    def abstract_state(params):
+        dense_params = {k: v for k, v in params.items() if k != "embed"}
+        return {
+            "dense": dense_optimizer.abstract_state(dense_params),
+            "embed_accum": jax.ShapeDtypeStruct((params["embed"].shape[0],), jnp.float32),
+        }
+
+    def train_step(params, opt_state, batch):
+        gids = collect_gids(c, batch)
+        sites = sorted(gids.keys())
+        flat_all = jnp.concatenate([gids[s].reshape(-1) for s in sites])
+        cap = c.dedup_capacity or int(flat_all.shape[0])
+        if mesh is not None and batch_axes is not None and local_dedup_capacity:
+            # two-stage dedup: shrink the globally-sorted pool (§Perf pair 1)
+            from repro.embedding.dedup import dedup_hierarchical
+            unique, inverse, _ = dedup_hierarchical(
+                flat_all, capacity=cap, mesh=mesh, axes=batch_axes,
+                local_capacity=local_dedup_capacity)
+        else:
+            unique, inverse, _ = dedup(flat_all, capacity=cap)
+        safe = jnp.where(unique == jnp.int32(2**31 - 1), 0, unique)
+        working = jnp.take(params["embed"], safe, axis=0)        # (cap, D)
+
+        # split inverse back per call site
+        inv_by_site = {}
+        off = 0
+        for s in sites:
+            n = int(np.prod(gids[s].shape))
+            inv_by_site[s] = inverse[off: off + n].reshape(gids[s].shape)
+            off += n
+
+        dense_params = {k: v for k, v in params.items() if k != "embed"}
+
+        def local_loss(dense_p, working_rows):
+            rows = {f"_rows_{s}": jnp.take(working_rows, inv_by_site[s], axis=0)
+                    for s in sites}
+            b2 = dict(batch)
+            b2.update(rows)
+            p2 = dict(dense_p)
+            p2["embed"] = params["embed"]  # untouched by grad (rows injected)
+            logits = forward(p2, c, b2)
+            return sigmoid_bce(logits, batch["label"]).mean()
+
+        loss, (gd, gw) = jax.value_and_grad(local_loss, argnums=(0, 1))(
+            dense_params, working)
+
+        # dense update
+        new_dense, new_dense_state = dense_optimizer.update(
+            dense_params, gd, opt_state["dense"])
+
+        # Adagrad on working rows only
+        gw = gw.astype(jnp.float32)
+        valid = (unique != jnp.int32(2**31 - 1)).astype(jnp.float32)[:, None]
+        gw = gw * valid
+        gsq = jnp.sum(gw * gw, axis=-1)
+        accum_rows = jnp.take(opt_state["embed_accum"], safe) + gsq
+        scale = embed_lr / (jnp.sqrt(accum_rows) + embed_eps)
+        new_rows = (working.astype(jnp.float32) - scale[:, None] * gw)
+        embed = params["embed"].at[safe].set(
+            jnp.where(valid > 0, new_rows.astype(params["embed"].dtype), working))
+        accum = opt_state["embed_accum"].at[safe].set(
+            jnp.where(valid[:, 0] > 0, accum_rows,
+                      jnp.take(opt_state["embed_accum"], safe)))
+
+        new_params = dict(new_dense)
+        new_params["embed"] = embed
+        return new_params, {"dense": new_dense_state, "embed_accum": accum}, {"loss": loss}
+
+    return train_step, init, abstract_state
+
+
+def serve_step(params: Params, c: RecsysConfig, batch: Dict[str, jax.Array]) -> jax.Array:
+    """Online/offline scoring: batch -> pCTR (B,)."""
+    return jax.nn.sigmoid(forward(params, c, batch))
+
+
+def retrieval_score(params: Params, c: RecsysConfig, user_batch: Dict[str, jax.Array],
+                    candidate_ids: jax.Array) -> jax.Array:
+    """Score ONE user context against many candidates (batched, no loop).
+
+    User-side features (batch size 1) are broadcast across the candidate
+    axis; the candidate id replaces the item field. This is full-model
+    scoring at candidate batch size — the `retrieval_cand` shape.
+    """
+    n = candidate_ids.shape[0]
+    batch: Dict[str, jax.Array] = {}
+    for key, v in user_batch.items():
+        if key == "label":
+            continue
+        batch[key] = jnp.broadcast_to(v, (n,) + v.shape[1:])
+    sparse = batch["sparse"].at[:, c.item_field].set(candidate_ids.astype(jnp.int32))
+    batch["sparse"] = sparse
+    return jax.nn.sigmoid(forward(params, c, batch))

@@ -1,0 +1,579 @@
+"""LM transformer family: dense GQA (yi/qwen) + MLA-MoE (DeepSeek).
+
+Built for the production mesh (DESIGN.md §5):
+
+* scan-over-layers with remat — HLO stays O(1) in depth, activations live
+  only at layer boundaries;
+* flash attention (O(S) memory) — 32k prefill never forms (S, S);
+* chunked cross-entropy — the (B, S, V) logits tensor is never materialized;
+  the loss scans sequence chunks against the (sharded) LM head;
+* optional microbatch gradient accumulation for the 236B config;
+* MoE layers dispatch via shard_map expert parallelism (``models.moe``).
+
+Params are plain pytrees; ``abstract_params`` builds ShapeDtypeStructs so the
+512-chip dry-run lowers without allocating 472 GB.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models import attention as A
+from repro.models.common import dense, rms_norm, softmax_xent
+from repro.models.moe import MoEConfig, moe_ffn, moe_params_shape
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 128
+    qkv_bias: bool = False
+    rope_base: float = 10000.0
+    attn: str = "gqa"                       # "gqa" | "mla"
+    mla: Optional[A.MLAConfig] = None
+    moe: Optional[MoEConfig] = None
+    first_k_dense: int = 0                  # leading dense-FFN layers (DeepSeek)
+    dtype: Any = jnp.bfloat16
+    # distribution
+    grad_accum: int = 1                     # microbatch accumulation steps
+    accum_dtype: Any = jnp.float32          # grad-accumulator dtype (bf16 for 236B)
+    remat_group: int = 1                    # checkpoint every g layers (g>1 saves HBM)
+    q_block: int = 512
+    kv_block: int = 512
+    loss_chunk: int = 2048                  # seq chunk for CE
+
+    @property
+    def n_moe_layers(self) -> int:
+        return self.n_layers - self.first_k_dense if self.moe else 0
+
+    @property
+    def n_dense_layers(self) -> int:
+        return self.n_layers if self.moe is None else self.first_k_dense
+
+
+# ----------------------------------------------------------------- params
+def _attn_shapes(c: LMConfig) -> Dict[str, Tuple[int, ...]]:
+    if c.attn == "mla":
+        assert c.mla is not None
+        return A.mla_params_shape(c.mla)
+    return A.gqa_params_shape(c.d_model, c.n_heads, c.n_kv, c.head_dim,
+                              qkv_bias=c.qkv_bias)
+
+
+def _dense_layer_shapes(c: LMConfig) -> Dict[str, Tuple[int, ...]]:
+    shapes = {f"attn_{k}": v for k, v in _attn_shapes(c).items()}
+    shapes.update({
+        "ffn_w1": (c.d_model, c.d_ff),
+        "ffn_w3": (c.d_model, c.d_ff),
+        "ffn_w2": (c.d_ff, c.d_model),
+        "norm1": (c.d_model,),
+        "norm2": (c.d_model,),
+    })
+    return shapes
+
+
+def _moe_layer_shapes(c: LMConfig) -> Dict[str, Tuple[int, ...]]:
+    assert c.moe is not None
+    shapes = {f"attn_{k}": v for k, v in _attn_shapes(c).items()}
+    shapes.update({f"moe_{k}": v for k, v in moe_params_shape(c.d_model, c.moe).items()})
+    shapes.update({"norm1": (c.d_model,), "norm2": (c.d_model,)})
+    return shapes
+
+
+def param_shapes(c: LMConfig) -> Dict[str, Any]:
+    """Full parameter tree as name -> shape (layers stacked on axis 0)."""
+    tree: Dict[str, Any] = {
+        "embed": (c.vocab, c.d_model),
+        "final_norm": (c.d_model,),
+        "lm_head": (c.d_model, c.vocab),
+    }
+    if c.n_dense_layers:
+        tree["dense_layers"] = {
+            k: (c.n_dense_layers,) + v for k, v in _dense_layer_shapes(c).items()
+        }
+    if c.n_moe_layers:
+        tree["moe_layers"] = {
+            k: (c.n_moe_layers,) + v for k, v in _moe_layer_shapes(c).items()
+        }
+    return tree
+
+
+def abstract_params(c: LMConfig) -> Params:
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s, c.dtype), param_shapes(c),
+        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def init_params(c: LMConfig, key: jax.Array) -> Params:
+    def init_one(path_shape, k):
+        shape = path_shape
+        scale = 0.02
+        return jax.random.normal(k, shape, jnp.float32).astype(c.dtype) * scale
+
+    shapes = param_shapes(c)
+    leaves, treedef = jax.tree.flatten(shapes, is_leaf=lambda x: isinstance(x, tuple))
+    keys = jax.random.split(key, len(leaves))
+    inited = [init_one(s, k) for s, k in zip(leaves, keys)]
+    params = jax.tree.unflatten(treedef, inited)
+    # norms start at 1
+    def ones_norms(d, prefix=""):
+        for name in list(d.keys()):
+            if isinstance(d[name], dict):
+                ones_norms(d[name])
+            elif "norm" in name:
+                d[name] = jnp.ones_like(d[name])
+    ones_norms(params)
+    return params
+
+
+# ------------------------------------------------------------- param specs
+def param_specs(c: LMConfig, *, dp: Tuple[str, ...] = ("data",),
+                tp: Optional[str] = "model"):
+    """PartitionSpec tree (2-D FSDP x TP for big weights).
+
+    ``tp=None`` selects pure ZeRO-DP: every matrix row-sharded over ALL mesh
+    axes, no tensor parallelism — the right-sized mapping for dense models
+    whose layer weights fit one chip (EXPERIMENTS.md §Perf, yi-9b iteration).
+    """
+    if tp is None:
+        all_axes = dp  # caller passes the flattened axes
+
+        def spec_for(name: str, shape: Tuple[int, ...], stacked: bool):
+            lead = (None,) if stacked else ()
+            base = shape[1:] if stacked else shape
+            if len(base) >= 2 and int(np.prod(base)) >= 1 << 16:
+                return P(*lead, all_axes, *(None,) * (len(base) - 1))
+            return P(*lead, *(None,) * len(base))
+
+        shapes = param_shapes(c)
+        out: Dict[str, Any] = {}
+        for name, v in shapes.items():
+            if isinstance(v, dict):
+                out[name] = {k: spec_for(k, s, True) for k, s in v.items()}
+            else:
+                out[name] = spec_for(name, v, False)
+        return out
+
+    def spec_for(name: str, shape: Tuple[int, ...], stacked: bool):
+        lead = (None,) if stacked else ()
+        base = shape[1:] if stacked else shape
+        if name == "embed":
+            # vocab-sharded only: a (V/16, D) shard is ~65MB for the largest
+            # vocab; 2-D sharding would force a full-table all-gather at the
+            # token lookup (measured +1.05GiB/device transient)
+            return P(tp, None)
+        if name == "lm_head":
+            return P(None, tp)
+        if name in ("final_norm",):
+            return P(None)
+        if "norm" in name:
+            return P(*lead, None)
+        if name.startswith("attn_b"):
+            return P(*lead, tp)
+        if name.startswith("attn_w") or name.startswith("ffn_"):
+            if len(base) == 2:
+                # (d_in, d_out): FSDP on in, TP on out — except down-projections
+                if name in ("attn_wo",) or name.endswith("_w2"):
+                    return P(*lead, tp, "data")
+                return P(*lead, "data", tp)
+            return P(*lead, *(None,) * len(base))
+        if name.startswith("moe_"):
+            sub = name[len("moe_"):]
+            if sub == "router":
+                return P(*lead, None, None)
+            if sub in ("w1", "w3"):
+                ff = "data" if (c.moe and c.moe.shard_ff_over_data) else None
+                return P(*lead, tp, None, ff)
+            if sub == "w2":
+                ff = "data" if (c.moe and c.moe.shard_ff_over_data) else None
+                return P(*lead, tp, ff, None)
+            if sub in ("sw1", "sw3"):
+                return P(*lead, "data", tp)
+            if sub == "sw2":
+                return P(*lead, tp, "data")
+        raise ValueError(f"no spec rule for {name}: {shape}")
+
+    shapes = param_shapes(c)
+    out: Dict[str, Any] = {}
+    for name, v in shapes.items():
+        if isinstance(v, dict):
+            out[name] = {k: spec_for(k, s, True) for k, s in v.items()}
+        else:
+            out[name] = spec_for(name, v, False)
+    return out
+
+
+# ------------------------------------------------------------------ blocks
+def _head_constraint(mesh, dp, n_heads: int, tp="model"):
+    """Shard attention heads over 'model' when divisible (SPMD hint; without
+    it propagation replicates attention activations across the TP axis)."""
+    if mesh is None or tp is None or n_heads % mesh.shape[tp] != 0:
+        return None
+    from jax.sharding import NamedSharding
+
+    def constrain(x):  # (B, S, H, Dh)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(dp, None, tp, None)))
+    return constrain
+
+
+def _attn_block(lp: Params, x: jax.Array, c: LMConfig, *, positions=None,
+                mesh=None, dp=("data",), tp="model"):
+    prefix = {k[len("attn_"):]: v for k, v in lp.items() if k.startswith("attn_")}
+    hc = _head_constraint(mesh, dp, c.n_heads, tp)
+    if c.attn == "mla":
+        return A.mla_attention(prefix, x, c.mla, positions=positions,
+                               q_block=c.q_block, kv_block=c.kv_block,
+                               head_constraint=hc)
+    return A.gqa_attention(prefix, x, n_heads=c.n_heads, n_kv=c.n_kv,
+                           head_dim=c.head_dim, positions=positions,
+                           rope_base=c.rope_base,
+                           q_block=c.q_block, kv_block=c.kv_block,
+                           head_constraint=hc)
+
+
+def _dense_block(lp: Params, x: jax.Array, c: LMConfig, *, mesh=None,
+                 dp=("data",), tp="model", constraint=None):
+    h = x + _attn_block(lp, rms_norm(x, lp["norm1"]), c, mesh=mesh, dp=dp, tp=tp)
+    if constraint is not None:
+        h = constraint(h)
+    hn = rms_norm(h, lp["norm2"])
+    ff = jax.nn.silu(dense(hn, lp["ffn_w1"])) * dense(hn, lp["ffn_w3"])
+    out = h + dense(ff, lp["ffn_w2"])
+    return out if constraint is None else constraint(out), jnp.float32(0.0)
+
+
+def _moe_block(lp: Params, x: jax.Array, c: LMConfig, *, mesh=None,
+               dp=("data",), tp="model", constraint=None):
+    assert tp is not None, "MoE layers require a tensor/expert-parallel axis"
+    h = x + _attn_block(lp, rms_norm(x, lp["norm1"]), c, mesh=mesh, dp=dp, tp=tp)
+    if constraint is not None:
+        h = constraint(h)
+    hn = rms_norm(h, lp["norm2"])
+    b, s, d = hn.shape
+    moe_p = {k[len("moe_"):]: v for k, v in lp.items() if k.startswith("moe_")}
+    out2d, aux = moe_ffn(moe_p, hn.reshape(b * s, d), c.moe, mesh=mesh,
+                         dp_axes=dp, tp_axis="model")
+    out = h + out2d.reshape(b, s, d)
+    return out if constraint is None else constraint(out), aux
+
+
+# ----------------------------------------------------------------- forward
+def _make_constraint(mesh, dp, tp="model"):
+    if mesh is None:
+        return None
+    from jax.sharding import NamedSharding
+
+    def constrain(x):
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(dp, None, tp)))
+    return constrain
+
+
+def _strip_axis(spec: P, axis: str) -> P:
+    """Remove one mesh axis from a PartitionSpec (FSDP gather-at-use)."""
+    parts = []
+    for entry in spec:
+        if entry == axis:
+            parts.append(None)
+        elif isinstance(entry, tuple):
+            kept = tuple(a for a in entry if a != axis)
+            parts.append(kept if len(kept) > 1 else (kept[0] if kept else None))
+        else:
+            parts.append(entry)
+    return P(*parts)
+
+
+def _make_weight_gather(mesh, c: "LMConfig", group: str, dp=("data",), tp="model"):
+    """Constraint tree forcing per-layer FSDP weight gather along 'data'.
+
+    Without it GSPMD keeps weights data-sharded at their (twice-nested-loop)
+    use sites and ALL-REDUCES the (B,S,d_ff) activations over 'data' instead
+    — measured 3.7 TB/device/step of activation collectives on yi-9b vs
+    ~36 GB of weight gathers (EXPERIMENTS.md §Perf iteration 3).
+    """
+    if mesh is None:
+        return None
+    from jax.sharding import NamedSharding
+
+    specs = param_specs(c, dp=dp, tp=tp)[group]
+    strip = ("data",) if tp is not None else tuple(
+        a for axes in dp for a in (axes if isinstance(axes, tuple) else (axes,)))
+
+    def constrain(lp):
+        out = {}
+        for k, v in lp.items():
+            if k in ("moe_w1", "moe_w3", "moe_w2"):
+                # routed-expert weights keep their ZeRO sharding: moe_ffn
+                # all-gathers them INSIDE shard_map (per expert shard)
+                out[k] = v
+                continue
+            spec = specs[k]
+            # drop the stacked-layer leading entry, strip the fsdp axes
+            layer_spec = P(*tuple(spec)[1:])
+            for ax in strip:
+                layer_spec = _strip_axis(layer_spec, ax)
+            out[k] = jax.lax.with_sharding_constraint(
+                v, NamedSharding(mesh, layer_spec))
+        return out
+    return constrain
+
+
+def hidden_states(params: Params, tokens: jax.Array, c: LMConfig,
+                  *, mesh=None, dp=("data",), tp="model") -> Tuple[jax.Array, jax.Array]:
+    """Embed + all layers; returns (hidden (B,S,D), aux loss)."""
+    constraint = _make_constraint(mesh, dp, tp)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(c.dtype)
+    if constraint is not None:
+        x = constraint(x)
+    aux_total = jnp.float32(0.0)
+
+    def scan_blocks(x, aux_total, stacked, block_fn, n_layers, gather=None):
+        """scan-over-layers with remat every ``c.remat_group`` layers.
+
+        g > 1 stores boundary activations only every g layers (recomputing
+        the inner g-1 on backward) — the standard depth/memory trade used to
+        fit the 236B config in 16 GB HBM.
+        """
+        g = max(1, min(c.remat_group, n_layers))
+        if n_layers % g:
+            g = 1
+
+        def one_layer(x, lp):
+            if gather is not None:
+                lp = gather(lp)  # FSDP: gather weights, don't reduce activations
+            return block_fn(lp, x)
+
+        if g == 1:
+            def body(carry, lp):
+                x, aux = carry
+                x, a = jax.checkpoint(one_layer)(x, lp)
+                return (x, aux + a), None
+            (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), stacked)
+            return x, aux_total
+
+        grouped = jax.tree.map(
+            lambda a: a.reshape((n_layers // g, g) + a.shape[1:]), stacked)
+
+        def group_fn(x, group_params):
+            # nested remat: outer checkpoint keeps only group boundaries;
+            # inner checkpoint bounds the recompute working set to one layer
+            def inner(carry, lp):
+                x, aux = carry
+                x, a = jax.checkpoint(one_layer)(x, lp)
+                return (x, aux + a), None
+            (x, aux), _ = jax.lax.scan(inner, (x, jnp.float32(0.0)), group_params)
+            return x, aux
+
+        def body(carry, group_params):
+            x, aux = carry
+            x, a = jax.checkpoint(group_fn)(x, group_params)
+            return (x, aux + a), None
+
+        (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), grouped)
+        return x, aux_total
+
+    if c.n_dense_layers:
+        x, aux_total = scan_blocks(
+            x, aux_total, params["dense_layers"],
+            lambda lp, x: _dense_block(lp, x, c, mesh=mesh, dp=dp, tp=tp,
+                                       constraint=constraint),
+            c.n_dense_layers,
+            gather=_make_weight_gather(mesh, c, "dense_layers", dp=dp, tp=tp))
+
+    if c.n_moe_layers:
+        x, aux_total = scan_blocks(
+            x, aux_total, params["moe_layers"],
+            lambda lp, x: _moe_block(lp, x, c, mesh=mesh, dp=dp, tp=tp,
+                                     constraint=constraint),
+            c.n_moe_layers,
+            gather=_make_weight_gather(mesh, c, "moe_layers", dp=dp, tp=tp))
+
+    return rms_norm(x, params["final_norm"]), aux_total
+
+
+def lm_loss(params: Params, tokens: jax.Array, labels: jax.Array, c: LMConfig,
+            *, mesh=None, dp=("data",), tp="model",
+            aux_weight: float = 0.01) -> jax.Array:
+    """Mean CE over tokens with seq-chunked logits (never (B,S,V) at once)."""
+    h, aux = hidden_states(params, tokens, c, mesh=mesh, dp=dp, tp=tp)
+    b, s, d = h.shape
+    chunk = min(c.loss_chunk, s)
+    n_chunks = (s + chunk - 1) // chunk
+    s_pad = n_chunks * chunk
+    if s_pad != s:
+        h = jnp.pad(h, ((0, 0), (0, s_pad - s), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, s_pad - s)))
+    hc = h.reshape(b, n_chunks, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, n_chunks, chunk).transpose(1, 0, 2)
+    valid = (jnp.arange(s_pad) < s).reshape(n_chunks, chunk)
+
+    def chunk_loss(carry, xs):
+        hx, lx, vx = xs
+        logits = jnp.einsum("bsd,dv->bsv", hx, params["lm_head"].astype(hx.dtype))
+        ce = softmax_xent(logits, lx) * vx[None, :]
+        return carry + ce.sum(), None
+
+    total, _ = jax.lax.scan(chunk_loss, jnp.float32(0.0), (hc, lc, valid))
+    return total / (b * s) + aux_weight * aux
+
+
+# -------------------------------------------------------------- train step
+def make_train_step(c: LMConfig, optimizer, *, mesh=None, dp=("data",), tp="model"):
+    """Build train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``optimizer`` follows repro.train.optimizer (init/update pair). With
+    ``c.grad_accum > 1`` microbatches are scanned and grads accumulated in
+    fp32 before one optimizer step.
+    """
+
+    def loss_fn(params, tokens, labels):
+        return lm_loss(params, tokens, labels, c, mesh=mesh, dp=dp, tp=tp)
+
+    def train_step(params, opt_state, batch):
+        tokens, labels = batch["tokens"], batch["labels"]
+        if c.grad_accum > 1:
+            b = tokens.shape[0]
+            a = c.grad_accum
+            assert b % a == 0, (b, a)
+            tok = tokens.reshape(a, b // a, -1)
+            lab = labels.reshape(a, b // a, -1)
+
+            def micro(carry, xs):
+                loss_acc, grad_acc = carry
+                t, l = xs
+                loss, grads = jax.value_and_grad(loss_fn)(params, t, l)
+                grad_acc = jax.tree.map(
+                    lambda g_acc, g: (g_acc.astype(jnp.float32)
+                                      + g.astype(jnp.float32) / a).astype(c.accum_dtype),
+                    grad_acc, grads)
+                return (loss_acc + loss / a, grad_acc), None
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, c.accum_dtype), params)
+            (loss, grads), _ = jax.lax.scan(micro, (jnp.float32(0.0), zero), (tok, lab))
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, tokens, labels)
+        params, opt_state = optimizer.update(params, grads, opt_state)
+        return params, opt_state, {"loss": loss}
+
+    return train_step
+
+
+# ------------------------------------------------------------ serve (decode)
+def make_cache(c: LMConfig, batch: int, max_len: int, *, abstract: bool = False):
+    """KV cache pytree. GQA: k/v per layer; MLA: latent + rope key."""
+    def mk(shape):
+        if abstract:
+            return jax.ShapeDtypeStruct(shape, c.dtype)
+        return jnp.zeros(shape, c.dtype)
+
+    if c.attn == "mla":
+        m = c.mla
+        cache = {
+            "ckv": mk((c.n_layers, batch, max_len, m.kv_lora_rank)),
+            "krope": mk((c.n_layers, batch, max_len, m.qk_rope_dim)),
+        }
+    else:
+        cache = {
+            "k": mk((c.n_layers, batch, max_len, c.n_kv, c.head_dim)),
+            "v": mk((c.n_layers, batch, max_len, c.n_kv, c.head_dim)),
+        }
+    return cache
+
+
+def cache_specs(c: LMConfig, *, dp=("data",), tp: str = "model"):
+    if c.attn == "mla":
+        return {"ckv": P(None, dp, None, tp), "krope": P(None, dp, None, None)}
+    # shard head_dim over tp (n_kv may not divide the tp axis)
+    return {"k": P(None, dp, None, None, tp), "v": P(None, dp, None, None, tp)}
+
+
+def serve_step(params: Params, token: jax.Array, cache, cache_len: jax.Array,
+               c: LMConfig, *, mesh=None, dp=("data",)):
+    """One decode step: token (B, 1) int32 -> (logits (B, V), new cache)."""
+    constraint = None  # decode activations are small; let GSPMD propagate
+    x = jnp.take(params["embed"], token, axis=0).astype(c.dtype)
+
+    def layer(x, lp, layer_cache):
+        prefix = {k[len("attn_"):]: v for k, v in lp.items() if k.startswith("attn_")}
+        xn = rms_norm(x, lp["norm1"])
+        if c.attn == "mla":
+            out, (ckv, krope) = A.mla_decode_step(
+                prefix, xn, layer_cache["ckv"], layer_cache["krope"], cache_len, c.mla)
+            new_cache = {"ckv": ckv, "krope": krope}
+        else:
+            out, (k, v) = A.gqa_decode_step(
+                prefix, xn, layer_cache["k"], layer_cache["v"], cache_len,
+                n_heads=c.n_heads, n_kv=c.n_kv, head_dim=c.head_dim,
+                rope_base=c.rope_base)
+            new_cache = {"k": k, "v": v}
+        h = x + out
+        hn = rms_norm(h, lp["norm2"])
+        if "ffn_w1" in lp:
+            ff = jax.nn.silu(dense(hn, lp["ffn_w1"])) * dense(hn, lp["ffn_w3"])
+            h = h + dense(ff, lp["ffn_w2"])
+        else:
+            moe_p = {k[len("moe_"):]: v for k, v in lp.items() if k.startswith("moe_")}
+            b = hn.shape[0]
+            out2d, _ = moe_ffn(moe_p, hn.reshape(b, -1), c.moe, mesh=mesh,
+                               dp_axes=dp, tp_axis="model")
+            h = h + out2d.reshape(hn.shape)
+        return h, new_cache
+
+    new_cache = {}
+    # dense layers (cache slices [0, n_dense))
+    if c.n_dense_layers:
+        nd = c.n_dense_layers
+        def dense_scan(x, xs):
+            lp, lcache = xs
+            return layer(x, lp, lcache)
+        x, nc = jax.lax.scan(
+            dense_scan, x,
+            (params["dense_layers"], jax.tree.map(lambda a: a[:nd], cache)))
+        for k, v in nc.items():
+            new_cache.setdefault(k, []).append(v)
+    if c.n_moe_layers:
+        nd = c.n_dense_layers
+        def moe_scan(x, xs):
+            lp, lcache = xs
+            return layer(x, lp, lcache)
+        x, nc = jax.lax.scan(
+            moe_scan, x,
+            (params["moe_layers"], jax.tree.map(lambda a: a[nd:], cache)))
+        for k, v in nc.items():
+            new_cache.setdefault(k, []).append(v)
+    cache_out = {
+        k: (jnp.concatenate(v, axis=0) if len(v) > 1 else v[0])
+        for k, v in new_cache.items()
+    }
+    x = rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype))
+    return logits[:, 0], cache_out
+
+
+def prefill(params: Params, tokens: jax.Array, c: LMConfig,
+            *, mesh=None, dp=("data",), tp="model"):
+    """Prefill: full forward; returns last-position logits (B, V).
+
+    (Cache materialization for decode handoff is a gather over the layer
+    scan; for the dry-run cost model the transformer forward dominates.)
+    """
+    h, _ = hidden_states(params, tokens, c, mesh=mesh, dp=dp, tp=tp)
+    last = h[:, -1]
+    return jnp.einsum("bd,dv->bv", last, params["lm_head"].astype(last.dtype))

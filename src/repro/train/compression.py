@@ -1,0 +1,89 @@
+"""Gradient compression for cross-pod reduction (distributed-optimization).
+
+At 2+ pods the inter-pod links are the scarce resource (data-center network
+vs in-pod ICI), so cross-pod gradient all-reduce benefits from compression:
+
+* ``bf16_compress`` — cast fp32 grads to bf16 for the wire (2x), with
+  **error feedback** (residual carrying) so quantization error is not lost
+  but applied next step [Seide et al. 2014; 1-bit SGD lineage].
+* ``int8_compress`` — per-tensor scale + int8 (4x), also with error feedback.
+* ``hierarchical_psum`` — shard_map helper: reduce-scatter inside the pod,
+  compressed all-reduce across pods, all-gather inside the pod. Inter-pod
+  bytes drop by (pod_size x compression) vs a flat all-reduce.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ------------------------------------------------------- codecs (+feedback)
+def bf16_compress(grads: Any, residual: Optional[Any] = None) -> Tuple[Any, Any]:
+    """fp32 -> bf16 with error feedback. Returns (wire_grads, new_residual)."""
+    if residual is None:
+        residual = jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), grads)
+    adjusted = jax.tree.map(lambda g, r: g.astype(jnp.float32) + r, grads, residual)
+    wire = jax.tree.map(lambda a: a.astype(jnp.bfloat16), adjusted)
+    new_residual = jax.tree.map(
+        lambda a, w: a - w.astype(jnp.float32), adjusted, wire)
+    return wire, new_residual
+
+
+def bf16_decompress(wire: Any) -> Any:
+    return jax.tree.map(lambda w: w.astype(jnp.float32), wire)
+
+
+def int8_compress(grads: Any, residual: Optional[Any] = None) -> Tuple[Any, Any, Any]:
+    """fp32 -> (int8, scale) with error feedback."""
+    if residual is None:
+        residual = jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), grads)
+    adjusted = jax.tree.map(lambda g, r: g.astype(jnp.float32) + r, grads, residual)
+
+    def enc(a):
+        scale = jnp.maximum(jnp.max(jnp.abs(a)), 1e-30) / 127.0
+        q = jnp.clip(jnp.round(a / scale), -127, 127).astype(jnp.int8)
+        return q, scale
+
+    qs = jax.tree.map(enc, adjusted)
+    wire = jax.tree.map(lambda t: t[0], qs, is_leaf=lambda x: isinstance(x, tuple))
+    scales = jax.tree.map(lambda t: t[1], qs, is_leaf=lambda x: isinstance(x, tuple))
+    new_residual = jax.tree.map(
+        lambda a, q, s: a - q.astype(jnp.float32) * s, adjusted, wire, scales)
+    return wire, scales, new_residual
+
+
+def int8_decompress(wire: Any, scales: Any) -> Any:
+    return jax.tree.map(lambda q, s: q.astype(jnp.float32) * s, wire, scales)
+
+
+def compressed_bytes(tree: Any) -> int:
+    return int(sum(np.prod(l.shape) * l.dtype.itemsize for l in jax.tree.leaves(tree)))
+
+
+# ------------------------------------------------ hierarchical cross-pod sum
+def hierarchical_psum(x: jax.Array, *, pod_axis: str = "pod",
+                      inner_axis: str = "data",
+                      compress: bool = True) -> jax.Array:
+    """Two-level all-reduce for use INSIDE shard_map.
+
+    reduce_scatter(inner) -> [compress] psum(pod) [decompress] -> all_gather(inner).
+    Inter-pod traffic: N/inner_size elements (xN less) in bf16 (x2 less).
+    """
+    shard = jax.lax.psum_scatter(x, inner_axis, scatter_dimension=0, tiled=True)
+    if compress:
+        wire = shard.astype(jnp.bfloat16)
+        reduced = jax.lax.psum(wire, pod_axis).astype(shard.dtype)
+    else:
+        reduced = jax.lax.psum(shard, pod_axis)
+    return jax.lax.all_gather(reduced, inner_axis, axis=0, tiled=True)
+
+
+def flat_psum(x: jax.Array, *, pod_axis: str = "pod",
+              inner_axis: str = "data") -> jax.Array:
+    """Baseline: single flat all-reduce over both axes (for §Perf compare)."""
+    return jax.lax.psum(x, (pod_axis, inner_axis))

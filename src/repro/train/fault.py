@@ -1,0 +1,153 @@
+"""Fault tolerance + straggler mitigation + elastic scaling.
+
+Designed for thousands of workers; validated here with simulated failures
+(tests inject exceptions / delays):
+
+* :class:`ShardServer` — over-decomposed input-shard assignment with leases.
+  Data is split into many more shards than workers; workers lease shards,
+  heartbeat while processing, and commit on completion. A worker death
+  (missed heartbeats) returns its leased shards to the queue — no data loss,
+  no global restart. This is the MapReduce-style recovery FeatureBox's
+  baseline used, applied to the pipelined world.
+* :class:`StragglerPolicy` — duplicate-issue of the slowest in-flight shards
+  (backup tasks): when a shard's processing time exceeds p50 x factor, it is
+  re-issued to an idle worker; first commit wins, the loser is discarded.
+* :func:`elastic_remesh` — recompute the mesh + data partition when the
+  healthy-worker set changes; training resumes from the latest checkpoint
+  with the new topology (the step function is re-lowered; model sharding
+  specs are topology-relative so they transfer).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass
+class Lease:
+    shard_id: int
+    worker_id: str
+    issued_at: float
+    heartbeat_at: float
+    duplicate_of: Optional[int] = None
+
+
+class ShardServer:
+    """Lease-based shard queue with heartbeat failure detection."""
+
+    def __init__(self, n_shards: int, *, lease_timeout: float = 30.0):
+        self.n_shards = n_shards
+        self.lease_timeout = lease_timeout
+        self._pending: List[int] = list(range(n_shards))
+        self._leases: Dict[int, Lease] = {}
+        self._done: Set[int] = set()
+        self._lock = threading.Lock()
+        self.stats = {"reissued": 0, "completed": 0, "failed_workers": 0}
+
+    def acquire(self, worker_id: str, *, now: Optional[float] = None) -> Optional[int]:
+        now = time.monotonic() if now is None else now
+        with self._lock:
+            self._reap(now)
+            if not self._pending:
+                return None
+            shard = self._pending.pop(0)
+            self._leases[shard] = Lease(shard, worker_id, now, now)
+            return shard
+
+    def heartbeat(self, worker_id: str, shard_id: int, *, now: Optional[float] = None) -> bool:
+        now = time.monotonic() if now is None else now
+        with self._lock:
+            lease = self._leases.get(shard_id)
+            if lease is None or lease.worker_id != worker_id:
+                return False  # lease lost (reaped or committed by a backup)
+            lease.heartbeat_at = now
+            return True
+
+    def commit(self, worker_id: str, shard_id: int) -> bool:
+        """First commit wins; late/duplicate commits return False."""
+        with self._lock:
+            if shard_id in self._done:
+                return False
+            lease = self._leases.pop(shard_id, None)
+            if lease is None or lease.worker_id != worker_id:
+                # allow commit from a backup whose lease replaced the original
+                if lease is not None:
+                    self._leases[shard_id] = lease
+                    return False
+            self._done.add(shard_id)
+            self.stats["completed"] += 1
+            return True
+
+    def fail_worker(self, worker_id: str) -> int:
+        """Explicit failure notification: return all its shards to the queue."""
+        with self._lock:
+            lost = [s for s, l in self._leases.items() if l.worker_id == worker_id]
+            for s in lost:
+                del self._leases[s]
+                self._pending.insert(0, s)
+            if lost:
+                self.stats["failed_workers"] += 1
+                self.stats["reissued"] += len(lost)
+            return len(lost)
+
+    def done(self) -> bool:
+        with self._lock:
+            return len(self._done) == self.n_shards
+
+    def progress(self) -> Tuple[int, int]:
+        with self._lock:
+            return len(self._done), self.n_shards
+
+    def _reap(self, now: float) -> None:
+        dead = [s for s, l in self._leases.items()
+                if now - l.heartbeat_at > self.lease_timeout]
+        for s in dead:
+            del self._leases[s]
+            self._pending.insert(0, s)
+            self.stats["reissued"] += 1
+
+
+@dataclasses.dataclass
+class StragglerPolicy:
+    """Backup-task policy: re-issue shards running slower than p50 x factor."""
+
+    factor: float = 3.0
+    min_samples: int = 5
+    _durations: List[float] = dataclasses.field(default_factory=list)
+
+    def record(self, seconds: float) -> None:
+        self._durations.append(seconds)
+
+    def should_backup(self, elapsed: float) -> bool:
+        if len(self._durations) < self.min_samples:
+            return False
+        p50 = float(np.median(self._durations))
+        return elapsed > p50 * self.factor
+
+
+def elastic_remesh(n_healthy: int, *, model_parallel: int,
+                   pod_size: Optional[int] = None):
+    """Largest usable mesh for the current healthy-device count.
+
+    Keeps model parallelism fixed (the model's sharding requires it) and
+    shrinks/grows data parallelism; returns (mesh_shape, axis_names, n_used).
+    Devices beyond the largest full data-parallel replica sit out until the
+    next resize — the standard elastic-training contract.
+    """
+    if n_healthy < model_parallel:
+        raise ValueError(
+            f"cannot run: {n_healthy} healthy devices < model_parallel={model_parallel}")
+    dp = n_healthy // model_parallel
+    n_used = dp * model_parallel
+    if pod_size and n_used >= pod_size * 2 and n_used % pod_size == 0 \
+            and (pod_size % model_parallel == 0):
+        pods = n_used // pod_size
+        return ((pods, pod_size // model_parallel, model_parallel),
+                ("pod", "data", "model"), n_used)
+    return ((dp, model_parallel), ("data", "model"), n_used)

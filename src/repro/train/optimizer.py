@@ -1,0 +1,132 @@
+"""Optimizers (pytree-based, no external deps).
+
+Production CTR setups use Adam(W) for dense nets and Adagrad for embedding
+tables (sparse updates via ``embedding.sparse_grad_update``); the LM configs
+use AdamW with optionally reduced-precision moments (the 236B MoE keeps m/v
+in bf16 to fit HBM — see DESIGN.md §5 and EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Tuple[Any, Any]]
+    abstract_state: Callable[[Any], Any]
+
+
+def _cast_like(tree, ref):
+    return jax.tree.map(lambda t, r: t.astype(r.dtype), tree, ref)
+
+
+def adamw(
+    lr: float = 1e-4,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    moment_dtype=jnp.float32,
+    compute_dtype=jnp.float32,
+    clip_norm: Optional[float] = 1.0,
+) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def abstract_state(params):
+        z = lambda p: jax.ShapeDtypeStruct(p.shape, moment_dtype)
+        return {
+            "m": jax.tree.map(z, params),
+            "v": jax.tree.map(z, params),
+            "step": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+
+    def update(params, grads, state):
+        # compute_dtype < fp32 halves the transient update buffers for huge
+        # trees (bias-corrected scalars stay fp32; only elementwise math drops)
+        cd = compute_dtype
+        step = state["step"] + 1
+        grads = jax.tree.map(lambda g: g.astype(cd), grads)
+        if clip_norm is not None:
+            gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                                 for g in jax.tree.leaves(grads)))
+            scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-9)).astype(cd)
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        m = jax.tree.map(
+            lambda m_, g: (cd(b1) * m_.astype(cd) + cd(1 - b1) * g).astype(moment_dtype),
+            state["m"], grads)
+        v = jax.tree.map(
+            lambda v_, g: (cd(b2) * v_.astype(cd) + cd(1 - b2) * g * g).astype(moment_dtype),
+            state["v"], grads)
+        bc1 = (1 - b1 ** step.astype(jnp.float32)).astype(cd)
+        bc2 = (1 - b2 ** step.astype(jnp.float32)).astype(cd)
+
+        def upd(p, m_, v_):
+            mhat = m_.astype(cd) / bc1
+            vhat = v_.astype(cd) / bc2
+            delta = cd(lr) * mhat / (jnp.sqrt(vhat) + cd(eps))
+            if weight_decay:
+                delta = delta + cd(lr * weight_decay) * p.astype(cd)
+            return (p.astype(cd) - delta).astype(p.dtype)
+
+        params = jax.tree.map(upd, params, m, v)
+        return params, {"m": m, "v": v, "step": step}
+
+    return Optimizer(init=init, update=update, abstract_state=abstract_state)
+
+
+def adagrad(lr: float = 0.01, *, eps: float = 1e-10) -> Optimizer:
+    def init(params):
+        return {"accum": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+    def abstract_state(params):
+        return {"accum": jax.tree.map(
+            lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), params)}
+
+    def update(params, grads, state):
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        accum = jax.tree.map(lambda a, g: a + g * g, state["accum"], grads)
+        params = jax.tree.map(
+            lambda p, g, a: (p.astype(jnp.float32) - lr * g / (jnp.sqrt(a) + eps)).astype(p.dtype),
+            params, grads, accum)
+        return params, {"accum": accum}
+
+    return Optimizer(init=init, update=update, abstract_state=abstract_state)
+
+
+def sgd(lr: float = 0.01, *, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum:
+            return {"mu": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)}
+        return {}
+
+    def abstract_state(params):
+        if momentum:
+            return {"mu": jax.tree.map(
+                lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), params)}
+        return {}
+
+    def update(params, grads, state):
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if momentum:
+            mu = jax.tree.map(lambda m, g: momentum * m + g, state["mu"], grads)
+            params = jax.tree.map(
+                lambda p, m: (p.astype(jnp.float32) - lr * m).astype(p.dtype), params, mu)
+            return params, {"mu": mu}
+        params = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32) - lr * g).astype(p.dtype), params, grads)
+        return params, state
+
+    return Optimizer(init=init, update=update, abstract_state=abstract_state)

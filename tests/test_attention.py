@@ -1,0 +1,114 @@
+"""Attention: flash vs quadratic oracle; decode-vs-prefill consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import (
+    MLAConfig,
+    apply_rope,
+    attention_ref,
+    flash_attention,
+    gqa_attention,
+    gqa_decode_step,
+    gqa_params_shape,
+    mla_attention,
+    mla_decode_step,
+    mla_params_shape,
+)
+from repro.models.common import dense
+
+RNG = np.random.default_rng(11)
+
+
+@pytest.mark.parametrize("b,s,h,hk,dh,causal", [
+    (2, 128, 8, 2, 32, True),
+    (1, 300, 4, 4, 16, False),
+    (2, 64, 8, 1, 32, True),
+    (1, 96, 6, 3, 8, True),
+])
+def test_flash_matches_ref(b, s, h, hk, dh, causal):
+    q = jnp.asarray(RNG.normal(size=(b, s, h, dh)).astype(np.float32))
+    k = jnp.asarray(RNG.normal(size=(b, s, hk, dh)).astype(np.float32))
+    v = jnp.asarray(RNG.normal(size=(b, s, hk, dh)).astype(np.float32))
+    out = flash_attention(q, k, v, causal=causal, q_block=64, kv_block=32)
+    ref = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_mixed_value_dim():
+    """MLA shape regime: value head dim != qk head dim."""
+    q = jnp.asarray(RNG.normal(size=(2, 64, 4, 12)).astype(np.float32))
+    k = jnp.asarray(RNG.normal(size=(2, 64, 4, 12)).astype(np.float32))
+    v = jnp.asarray(RNG.normal(size=(2, 64, 4, 8)).astype(np.float32))
+    out = flash_attention(q, k, v, causal=True, q_block=16, kv_block=16)
+    ref = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_rope_relative_property():
+    """RoPE scores depend only on relative position."""
+    dh = 16
+    x = jnp.asarray(RNG.normal(size=(1, 2, 1, dh)).astype(np.float32))
+    s1 = apply_rope(x, jnp.asarray([0, 3]))
+    s2 = apply_rope(x, jnp.asarray([7, 10]))
+    dot1 = float((s1[0, 0, 0] * s1[0, 1, 0]).sum())
+    dot2 = float((s2[0, 0, 0] * s2[0, 1, 0]).sum())
+    assert abs(dot1 - dot2) < 1e-4
+
+
+def _gqa_cache_from_prefill(p, x, s, hk, dh):
+    pos = jnp.arange(s)
+    k = apply_rope(dense(x[:, :s], p["wk"], p.get("bk")).reshape(x.shape[0], s, hk, dh), pos)
+    v = dense(x[:, :s], p["wv"], p.get("bv")).reshape(x.shape[0], s, hk, dh)
+    ck = jnp.zeros((x.shape[0], s + 4, hk, dh)).at[:, :s].set(k)
+    cv = jnp.zeros((x.shape[0], s + 4, hk, dh)).at[:, :s].set(v)
+    return ck, cv
+
+
+def test_gqa_decode_matches_prefill():
+    d, h, hk, dh, b, s = 64, 4, 2, 16, 2, 12
+    shapes = gqa_params_shape(d, h, hk, dh, qkv_bias=True)
+    kg = jax.random.PRNGKey(0)
+    p = {k: jax.random.normal(jax.random.fold_in(kg, i), v) * 0.05
+         for i, (k, v) in enumerate(shapes.items())}
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, s + 1, d)) * 0.5
+    full = gqa_attention(p, x, n_heads=h, n_kv=hk, head_dim=dh,
+                         q_block=4, kv_block=4)
+    ck, cv = _gqa_cache_from_prefill(p, x, s, hk, dh)
+    out, (nk, nv) = gqa_decode_step(p, x[:, s:s + 1], ck, cv, jnp.int32(s),
+                                    n_heads=h, n_kv=hk, head_dim=dh)
+    np.testing.assert_allclose(np.asarray(out[:, 0]), np.asarray(full[:, s]),
+                               rtol=2e-4, atol=2e-4)
+    assert nk.shape == ck.shape  # fixed-size cache
+
+
+def test_mla_decode_matches_prefill():
+    c = MLAConfig(d_model=64, n_heads=4, q_lora_rank=32, kv_lora_rank=16,
+                  qk_nope_dim=8, qk_rope_dim=4, v_head_dim=8)
+    kg = jax.random.PRNGKey(2)
+    p = {k: jax.random.normal(jax.random.fold_in(kg, i), v) * 0.1
+         for i, (k, v) in enumerate(mla_params_shape(c).items())}
+    b, s = 2, 10
+    x = jax.random.normal(jax.random.PRNGKey(3), (b, s + 1, 64)) * 0.5
+    full = mla_attention(p, x, c, q_block=4, kv_block=4)
+    ckv = dense(x[:, :s], p["wdkv"])
+    krope = apply_rope(dense(x[:, :s], p["wkrope"])[:, :, None, :],
+                       jnp.arange(s))[:, :, 0]
+    cc = jnp.zeros((b, s + 4, c.kv_lora_rank)).at[:, :s].set(ckv)
+    ck = jnp.zeros((b, s + 4, c.qk_rope_dim)).at[:, :s].set(krope)
+    out, _ = mla_decode_step(p, x[:, s:s + 1], cc, ck, jnp.int32(s), c)
+    np.testing.assert_allclose(np.asarray(out[:, 0]), np.asarray(full[:, s]),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_mla_cache_is_compressed():
+    """The MLA decode cache stores kv_lora+rope per token, not 2*H*Dh."""
+    c = MLAConfig(d_model=64, n_heads=8, kv_lora_rank=16, qk_rope_dim=4,
+                  qk_nope_dim=8, v_head_dim=8, q_lora_rank=32)
+    full_cache_per_tok = 2 * c.n_heads * c.v_head_dim       # = 128
+    mla_cache_per_tok = c.kv_lora_rank + c.qk_rope_dim      # = 20
+    assert mla_cache_per_tok < full_cache_per_tok / 6

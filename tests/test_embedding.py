@@ -1,0 +1,117 @@
+"""Embedding substrate: dedup, working-set lookups, sparse updates, PS tiers."""
+
+import os
+import tempfile
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.embedding import (
+    HierarchicalPS,
+    MultiTable,
+    TableSpec,
+    bag_lookup_padded,
+    bag_lookup_segment,
+    dedup,
+    dedup_np,
+    init_sparse_adagrad,
+    sparse_grad_update,
+    undedup,
+)
+from repro.embedding.table import lookup, lookup_dedup
+
+RNG = np.random.default_rng(3)
+
+
+@hypothesis.given(st.lists(st.integers(0, 99), min_size=1, max_size=200),
+                  st.integers(200, 300))
+@hypothesis.settings(deadline=None, max_examples=40)
+def test_dedup_roundtrip(ids, capacity):
+    arr = jnp.asarray(np.asarray(ids, np.int32))
+    unique, inverse, count = dedup(arr, capacity=capacity)
+    assert int(count) == len(set(ids))
+    # reconstruction: unique[inverse] == ids
+    np.testing.assert_array_equal(np.asarray(unique)[np.asarray(inverse)], ids)
+
+
+def test_dedup_matches_np():
+    ids = RNG.integers(0, 50, (16, 4)).astype(np.int32)
+    u_np, inv_np = dedup_np(ids)
+    u_j, inv_j, cnt = dedup(jnp.asarray(ids), capacity=256)
+    uj = np.asarray(u_j)
+    assert (uj[: int(cnt)] == u_np).all()
+    np.testing.assert_array_equal(np.asarray(u_j)[np.asarray(inv_j)], ids)
+
+
+def test_lookup_dedup_equals_lookup():
+    params = jnp.asarray(RNG.normal(size=(100, 8)).astype(np.float32))
+    ids = jnp.asarray(RNG.integers(0, 100, (32, 5)).astype(np.int32))
+    np.testing.assert_allclose(
+        np.asarray(lookup(params, ids)),
+        np.asarray(lookup_dedup(params, ids, capacity=200)), rtol=1e-6)
+
+
+def test_bag_lookup_variants_agree():
+    params = jnp.asarray(RNG.normal(size=(50, 4)).astype(np.float32))
+    ids = RNG.integers(0, 50, (8, 3)).astype(np.int32)
+    mask = np.ones((8, 3), np.float32)
+    padded = bag_lookup_padded(params, jnp.asarray(ids), jnp.asarray(mask))
+    flat = ids.reshape(-1)
+    segs = np.repeat(np.arange(8, dtype=np.int32), 3)
+    seg = bag_lookup_segment(params, jnp.asarray(flat), jnp.asarray(segs), 8)
+    np.testing.assert_allclose(np.asarray(padded), np.asarray(seg), rtol=1e-6)
+
+
+def test_sparse_grad_update_touches_only_unique_rows():
+    mt = MultiTable.build([TableSpec("a", 60, 8), TableSpec("b", 40, 8)])
+    params = mt.init(jax.random.PRNGKey(0))
+    st_ = init_sparse_adagrad(mt.total_rows)
+    ids = jnp.asarray([3, 3, 7, 99], jnp.int32)
+    grads = jnp.asarray(RNG.normal(size=(4, 8)).astype(np.float32))
+    p2, st2 = sparse_grad_update(params, st_, ids, grads, capacity=8)
+    changed = np.where(np.abs(np.asarray(p2 - params)).sum(1) > 0)[0]
+    assert set(changed.tolist()) <= {3, 7, 99}
+    acc_changed = np.where(np.asarray(st2.accum) != np.asarray(st_.accum))[0]
+    assert set(acc_changed.tolist()) <= {3, 7, 99}
+
+
+def test_multitable_offsets_and_ids():
+    mt = MultiTable.build([TableSpec("a", 100, 8), TableSpec("b", 20, 8),
+                           TableSpec("c", 5, 8)])
+    assert mt.total_rows == 125
+    np.testing.assert_array_equal(mt.offsets, [0, 100, 120])
+    gids = mt.global_ids(jnp.asarray([[99, 19, 4], [0, 0, 0]]))
+    np.testing.assert_array_equal(np.asarray(gids), [[99, 119, 124], [0, 100, 120]])
+    with pytest.raises(ValueError):
+        MultiTable.build([TableSpec("a", 10, 8), TableSpec("b", 10, 16)])
+
+
+def test_hierarchy_pull_push_and_cache():
+    d = tempfile.mkdtemp()
+    ps = HierarchicalPS(os.path.join(d, "t.bin"), total_rows=500, dim=4,
+                        host_cache_rows=8)
+    ids = RNG.integers(0, 500, 64)
+    w, uniq, inv = ps.pull(ids)
+    assert (w[inv] == ps._ssd[ids]).all()
+    ps.push(uniq, w + 2.0)
+    w2, _, _ = ps.pull(ids)
+    np.testing.assert_allclose(w2[inv], ps._ssd[ids])
+    np.testing.assert_allclose(w2, w + 2.0)
+    assert ps.host_cache_size <= 8          # LRU bound respected
+    assert ps.stats.pulls == 2 and ps.stats.pushes == 1
+
+
+def test_hierarchy_persistence_across_reopen():
+    d = tempfile.mkdtemp()
+    path = os.path.join(d, "t.bin")
+    ps = HierarchicalPS(path, total_rows=100, dim=4)
+    w, uniq, _ = ps.pull(np.asarray([1, 2, 3]))
+    ps.push(uniq, np.full_like(w, 7.0))
+    ps.flush()
+    ps2 = HierarchicalPS(path, total_rows=100, dim=4, create=False)
+    w2, _, _ = ps2.pull(np.asarray([1, 2, 3]))
+    np.testing.assert_allclose(w2, 7.0)

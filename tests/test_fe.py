@@ -1,0 +1,158 @@
+"""Feature-extraction substrate: column store, cleaning, joins, FE graph."""
+
+import json
+import tempfile
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import build_schedule, compile_layers, run_layers, validate_schedule
+from repro.fe.colstore import ColumnStore, RaggedColumn
+from repro.fe.datagen import IMPRESSIONS, gen_views, write_views
+from repro.fe.join import bytes_of, hash_join, join_views, merge_on_instance
+from repro.fe.ops import ragged_to_bag, ragged_to_padded, tokenize_hash
+from repro.fe.pipeline_graph import build_fe_graph
+from repro.fe.schema import ColType
+from repro.fe.views import extract_json_fields, fill_nulls, filter_rows, n_rows
+
+
+def test_colstore_roundtrip_all_kinds():
+    store = ColumnStore(tempfile.mkdtemp())
+    rag = RaggedColumn(values=np.arange(10, dtype=np.int64),
+                       lengths=np.asarray([3, 0, 2, 5], np.int32))
+    cols = {
+        "i": np.asarray([1, 2, 3, 4], np.int64),
+        "f": np.asarray([0.5, 1.5, -2.0, np.nan], np.float32),
+        "s": np.asarray(["a b", "", "json{", "x"], object),
+        "r": rag,
+    }
+    store.write_chunk("v", 0, cols)
+    out = store.read_columns("v", 0, ["i", "f", "s", "r"])
+    np.testing.assert_array_equal(out["i"], cols["i"])
+    np.testing.assert_array_equal(out["f"][:3], cols["f"][:3])
+    assert list(out["s"]) == list(cols["s"])
+    np.testing.assert_array_equal(out["r"].values, rag.values)
+    np.testing.assert_array_equal(out["r"].lengths, rag.lengths)
+    # column store reads ONLY requested columns' bytes
+    one = store.column_bytes("v", 0, ["i"])
+    all_ = store.column_bytes("v", 0, ["i", "f", "s", "r"])
+    assert 0 < one < all_
+
+
+def test_row_count_mismatch_rejected():
+    store = ColumnStore(tempfile.mkdtemp())
+    with pytest.raises(ValueError):
+        store.write_chunk("v", 0, {"a": np.zeros(3), "b": np.zeros(4)})
+
+
+def test_fill_nulls_and_json():
+    null_i = np.iinfo(np.int64).min
+    cols = {
+        "instance_id": np.asarray([0, 1], np.int64),
+        "user_id": np.asarray([0, 1], np.int64),
+        "ad_id": np.asarray([0, 1], np.int64),
+        "label": np.asarray([0, 1], np.int64),
+        "hour": np.asarray([5, null_i], np.int64),
+        "dwell_time": np.asarray([1.0, np.nan], np.float32),
+        "context_json": np.asarray(['{"slot": 3}', "not json"], object),
+    }
+    cols = extract_json_fields(cols, "context_json", {"slot": ColType.INT})
+    cols = fill_nulls(cols, IMPRESSIONS)
+    assert cols["hour"][1] == 0
+    assert cols["dwell_time"][1] == 0.0
+    assert cols["slot"][0] == 3 and cols["slot"][1] == null_i  # filled downstream
+
+
+def test_filter_rows_ragged():
+    rag = RaggedColumn(values=np.arange(6, dtype=np.int64),
+                       lengths=np.asarray([2, 1, 3], np.int32))
+    cols = {"k": np.asarray([10, 20, 30]), "r": rag}
+    out = filter_rows(cols, np.asarray([True, False, True]))
+    assert n_rows(out) == 2
+    np.testing.assert_array_equal(out["r"].lengths, [2, 3])
+    np.testing.assert_array_equal(out["r"].values, [0, 1, 3, 4, 5])
+
+
+def _dict_join_oracle(left, right, key):
+    """Brute-force last-writer-wins left join for comparison."""
+    index = {int(k): i for i, k in enumerate(right[key])}
+    rows = [index.get(int(k), -1) for k in left[key]]
+    return rows
+
+
+@hypothesis.given(
+    st.lists(st.integers(0, 20), min_size=1, max_size=50),
+    st.lists(st.integers(0, 20), min_size=1, max_size=30),
+)
+@hypothesis.settings(deadline=None, max_examples=40)
+def test_hash_join_matches_oracle(lkeys, rkeys):
+    left = {"k": np.asarray(lkeys, np.int64),
+            "lv": np.arange(len(lkeys), dtype=np.int64)}
+    right = {"k": np.asarray(rkeys, np.int64),
+             "rv": np.arange(len(rkeys), dtype=np.float32) + 100}
+    out = hash_join(left, right, key="k", right_prefix="r_")
+    rows = _dict_join_oracle(left, right, "k")
+    for i, r in enumerate(rows):
+        if r < 0:
+            assert out["r_rv"][i] == 0.0
+        else:
+            assert out["r_rv"][i] == right["rv"][r]
+    # left row order preserved
+    np.testing.assert_array_equal(out["lv"], left["lv"])
+
+
+def test_merge_on_instance():
+    extracted = {"instance_id": np.asarray([2, 0, 1], np.int64)}
+    basic = {"instance_id": np.asarray([0, 1, 2], np.int64),
+             "ctr": np.asarray([0.1, 0.2, 0.3], np.float32)}
+    out = merge_on_instance(extracted, basic)
+    np.testing.assert_allclose(out["basic_ctr"], [0.3, 0.1, 0.2])
+
+
+def test_tokenize_hash_ragged_and_padded():
+    strings = np.asarray(["a b c", "", "a a"], object)
+    col = tokenize_hash(strings, field_size=1000, ngrams=2)
+    assert col.n_rows == 3
+    assert col.lengths[0] == 3 + 2   # 3 unigrams + 2 bigrams
+    assert col.lengths[1] == 0
+    # identical tokens hash identically
+    row2 = col.row(2)
+    assert row2[0] == row2[1]
+    ids, mask = ragged_to_padded(col, max_len=4)
+    assert ids.shape == (3, 4) and mask.sum() == min(5, 4) + 0 + 3
+    flat, segs = ragged_to_bag(col)
+    assert flat.shape[0] == int(col.lengths.sum())
+    np.testing.assert_array_equal(np.bincount(segs, minlength=3), col.lengths)
+
+
+def test_full_fe_graph_end_to_end():
+    views = gen_views(256, seed=3)
+    g = build_fe_graph()
+    sched = build_schedule(g)
+    validate_schedule(g, sched)
+    layers = compile_layers(sched)
+    env = run_layers(layers, dict(views))
+    b = 256
+    assert env["batch_dense"].shape == (b, 9)
+    assert env["batch_sparse"].shape == (b, 8)
+    assert env["batch_label"].shape == (b,)
+    dense = np.asarray(env["batch_dense"])
+    assert np.isfinite(dense).all()
+    sparse = np.asarray(env["batch_sparse"])
+    assert (sparse >= 0).all() and (sparse < 8 * (1 << 20)).all()
+    # field id spaces are disjoint
+    for f in range(8):
+        col = sparse[:, f]
+        assert (col // (1 << 20) == f).all()
+
+
+def test_fe_graph_deterministic():
+    views = gen_views(64, seed=5)
+    layers = compile_layers(build_schedule(build_fe_graph()))
+    a = run_layers(layers, dict(views))
+    b = run_layers(layers, dict(views))
+    np.testing.assert_array_equal(np.asarray(a["batch_sparse"]),
+                                  np.asarray(b["batch_sparse"]))

@@ -1,0 +1,95 @@
+"""End-to-end behaviour tests: raw logs -> FeatureBox pipeline -> CTR training
+with the hierarchical parameter server (the paper's full workflow, small)."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import build_schedule, compile_layers, run_layers
+from repro.embedding.hierarchy import HierarchicalPS
+from repro.fe.colstore import ColumnStore
+from repro.fe.datagen import (
+    AD_INVENTORY,
+    BASIC_FEATURES,
+    IMPRESSIONS,
+    USER_PROFILE,
+    gen_views,
+    write_views,
+)
+from repro.fe.pipeline_graph import build_fe_graph
+from repro.models.common import sigmoid_bce
+from repro.train.fault import ShardServer
+from repro.train.optimizer import adamw
+
+TABLE = 50_000
+DIM = 8
+
+
+def test_full_system_training_run():
+    workdir = tempfile.mkdtemp()
+    store = ColumnStore(os.path.join(workdir, "cols"))
+    write_views(store, gen_views(1024, seed=0), chunk_rows=256)
+
+    layers = compile_layers(build_schedule(build_fe_graph()))
+    ps = HierarchicalPS(os.path.join(workdir, "emb.bin"),
+                        total_rows=TABLE, dim=DIM, host_cache_rows=5000)
+    srv = ShardServer(n_shards=len(store.chunks("impressions")))
+
+    key = jax.random.PRNGKey(0)
+    from repro.fe.pipeline_graph import N_DENSE_FEATS, N_SPARSE_FIELDS
+    d_in = N_DENSE_FEATS + N_SPARSE_FIELDS * DIM
+    dense_p = {
+        "w1": jax.random.normal(key, (d_in, 32)) * 0.1,
+        "b1": jnp.zeros(32),
+        "w2": jax.random.normal(jax.random.fold_in(key, 1), (32, 1)) * 0.1,
+        "b2": jnp.zeros(1),
+    }
+    opt = adamw(5e-3)
+    opt_state = opt.init(dense_p)
+
+    @jax.jit
+    def train_step(dp, os_, working, inv, dense_feats, label):
+        def loss_fn(dp, w):
+            emb = jnp.take(w, inv, axis=0).reshape(inv.shape[0], -1)
+            x = jnp.concatenate([dense_feats, emb], axis=1)
+            h = jax.nn.relu(x @ dp["w1"] + dp["b1"])
+            logits = (h @ dp["w2"] + dp["b2"])[:, 0]
+            return sigmoid_bce(logits, label).mean()
+        loss, (gd, gw) = jax.value_and_grad(loss_fn, argnums=(0, 1))(dp, working)
+        dp, os_ = opt.update(dp, gd, os_)
+        return dp, os_, loss, gw
+
+    losses = []
+    for _ in range(4):  # a few epochs over the leased shards
+        if srv.done():
+            srv = ShardServer(n_shards=len(store.chunks("impressions")))
+        while not srv.done() and len(losses) < 16:
+            shard = srv.acquire("w0")
+            env = _run_shard(store, layers, shard)
+            ids = np.asarray(env["batch_sparse"]) % TABLE
+            working, uniq, inv = ps.pull(ids.reshape(-1))
+            inv = inv.reshape(ids.shape)
+            dense_p, opt_state, loss, gw = train_step(
+                dense_p, opt_state, jnp.asarray(working), jnp.asarray(inv),
+                env["batch_dense"], env["batch_label"])
+            ps.push(uniq, np.asarray(working) - 0.05 * np.asarray(gw))
+            srv.commit("w0", shard)
+            losses.append(float(loss))
+        if len(losses) >= 16:
+            break
+
+    assert np.isfinite(losses).all()
+    assert np.mean(losses[-4:]) < np.mean(losses[:4])
+    assert ps.stats.pulls == len(losses)
+
+
+def _run_shard(store, layers, shard):
+    env = {}
+    for vname, sch in (("impressions", IMPRESSIONS), ("user_profile", USER_PROFILE),
+                       ("ad_inventory", AD_INVENTORY), ("basic_features", BASIC_FEATURES)):
+        cid = shard % max(1, len(store.chunks(vname)))
+        env[vname] = store.read_columns(vname, cid, [c.name for c in sch.columns])
+    return run_layers(layers, env)

@@ -1,0 +1,209 @@
+"""Train substrate: checkpoint/restart, fault handling, compression, loop."""
+
+import os
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train.checkpoint import CheckpointManager
+from repro.train.compression import (
+    bf16_compress,
+    bf16_decompress,
+    compressed_bytes,
+    int8_compress,
+    int8_decompress,
+)
+from repro.train.fault import ShardServer, StragglerPolicy, elastic_remesh
+from repro.train.loop import LoopConfig, run_training
+from repro.train.optimizer import adagrad, adamw, sgd
+
+
+# ------------------------------------------------------------- checkpoints
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"w": jax.random.normal(k, (8, 4)),
+            "nested": {"b": jnp.arange(3.0), "step": jnp.int32(7)}}
+
+
+def test_checkpoint_roundtrip_and_latest():
+    d = tempfile.mkdtemp()
+    mgr = CheckpointManager(d, keep=2)
+    t0, t1 = _tree(0), _tree(1)
+    mgr.save(10, t0)
+    mgr.save(20, t1)
+    assert mgr.latest_step() == 20
+    step, restored = mgr.restore_latest(t0)
+    assert step == 20
+    for a, b in zip(jax.tree.leaves(restored), jax.tree.leaves(t1)):
+        np.testing.assert_allclose(a, b)
+
+
+def test_checkpoint_retention_gc():
+    d = tempfile.mkdtemp()
+    mgr = CheckpointManager(d, keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _tree(s))
+    steps = mgr._steps_on_disk()
+    assert steps == [3, 4]
+
+
+def test_checkpoint_async_and_wait():
+    d = tempfile.mkdtemp()
+    mgr = CheckpointManager(d)
+    mgr.save_async(5, _tree(5))
+    mgr.wait()
+    assert mgr.latest_step() == 5
+
+
+def test_checkpoint_shape_mismatch_rejected():
+    d = tempfile.mkdtemp()
+    mgr = CheckpointManager(d)
+    mgr.save(1, {"w": jnp.zeros((4,))})
+    with pytest.raises(ValueError):
+        mgr.restore(1, {"w": jnp.zeros((5,))})
+
+
+# ------------------------------------------------------------ fault/shards
+def test_shard_server_lease_commit():
+    srv = ShardServer(4, lease_timeout=100)
+    got = [srv.acquire("w0") for _ in range(4)]
+    assert sorted(got) == [0, 1, 2, 3]
+    assert srv.acquire("w0") is None
+    for s in got:
+        assert srv.commit("w0", s)
+    assert srv.done()
+
+
+def test_shard_server_reissues_on_timeout():
+    srv = ShardServer(2, lease_timeout=0.5)
+    s0 = srv.acquire("dead", now=0.0)
+    # worker dies silently; lease expires
+    s0b = srv.acquire("w1", now=10.0)
+    assert s0b == s0
+    assert srv.stats["reissued"] == 1
+    assert srv.commit("w1", s0b)
+    # zombie's late commit is rejected
+    assert not srv.commit("dead", s0)
+
+
+def test_shard_server_explicit_failure():
+    srv = ShardServer(3)
+    a = srv.acquire("w0")
+    b = srv.acquire("w0")
+    lost = srv.fail_worker("w0")
+    assert lost == 2
+    assert srv.stats["failed_workers"] == 1
+    # shards come back for others
+    assert srv.acquire("w1") in (a, b)
+
+
+def test_shard_server_heartbeat_keeps_lease():
+    srv = ShardServer(1, lease_timeout=1.0)
+    s = srv.acquire("w0", now=0.0)
+    assert srv.heartbeat("w0", s, now=0.9)
+    # heartbeat refreshed the lease, so at t=1.5 it hasn't expired
+    assert srv.acquire("w1", now=1.5) is None
+
+
+def test_straggler_policy_backup_decision():
+    p = StragglerPolicy(factor=3.0, min_samples=3)
+    for d in (1.0, 1.1, 0.9):
+        p.record(d)
+    assert not p.should_backup(2.0)
+    assert p.should_backup(3.5)
+
+
+def test_elastic_remesh():
+    shape, axes, used = elastic_remesh(512, model_parallel=16, pod_size=256)
+    assert shape == (2, 16, 16) and axes == ("pod", "data", "model")
+    shape, axes, used = elastic_remesh(250, model_parallel=16)
+    assert shape == (15, 16) and used == 240  # 10 devices sit out
+    with pytest.raises(ValueError):
+        elastic_remesh(8, model_parallel=16)
+
+
+# ------------------------------------------------------------- compression
+def test_bf16_error_feedback_converges():
+    g = {"w": jnp.asarray(np.linspace(-1e-3, 1e-3, 64).astype(np.float32))}
+    residual = None
+    acc = jnp.zeros(64)
+    for _ in range(50):
+        wire, residual = bf16_compress(g, residual)
+        acc = acc + bf16_decompress(wire)["w"]
+    # with feedback, the accumulated sum matches the true sum closely
+    np.testing.assert_allclose(np.asarray(acc), np.asarray(g["w"]) * 50,
+                               rtol=2e-3, atol=2e-6)
+
+
+def test_int8_compression_ratio_and_feedback():
+    g = {"w": jnp.asarray(np.random.default_rng(0)
+                          .normal(size=1024).astype(np.float32))}
+    wire, scales, residual = int8_compress(g)
+    assert compressed_bytes(wire) == compressed_bytes(g) // 4
+    dec = int8_decompress(wire, scales)
+    err = np.abs(np.asarray(dec["w"]) - np.asarray(g["w"])).max()
+    assert err <= float(scales["w"])  # quantization bound
+    # error feedback carries the residual
+    np.testing.assert_allclose(
+        np.asarray(residual["w"]),
+        np.asarray(g["w"]) - np.asarray(dec["w"]), rtol=1e-6, atol=1e-7)
+
+
+# -------------------------------------------------------------- optimizers
+@pytest.mark.parametrize("opt", [adamw(1e-1), adagrad(0.5), sgd(0.1, momentum=0.9)])
+def test_optimizers_reduce_quadratic(opt):
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = opt.init(params)
+
+    for _ in range(120):
+        grads = jax.grad(lambda p: (p["w"] ** 2).sum())(params)
+        params, state = opt.update(params, grads, state)
+    assert float((params["w"] ** 2).sum()) < 0.5
+
+
+def test_abstract_state_matches_concrete():
+    opt = adamw(1e-3)
+    params = {"w": jnp.zeros((3, 3)), "b": jnp.zeros(3)}
+    conc = opt.init(params)
+    ab = opt.abstract_state(params)
+    assert jax.tree.structure(ab) == jax.tree.structure(conc)
+    for a, c in zip(jax.tree.leaves(ab), jax.tree.leaves(conc)):
+        assert a.shape == c.shape and a.dtype == c.dtype
+
+
+# -------------------------------------------------------------------- loop
+def test_loop_trains_and_restarts():
+    d = tempfile.mkdtemp()
+    opt = sgd(0.2)
+
+    def batch_source(step):
+        rng = np.random.default_rng(step)
+        x = rng.normal(size=(16, 4)).astype(np.float32)
+        return {"x": jnp.asarray(x), "y": jnp.asarray(x.sum(1))}
+
+    @jax.jit
+    def train_step(state, batch):
+        def loss_fn(w):
+            pred = batch["x"] @ w
+            return ((pred - batch["y"]) ** 2).mean()
+        loss, g = jax.value_and_grad(loss_fn)(state["w"])
+        new_w, _ = opt.update({"w": state["w"]}, {"w": g}, {})
+        return {"w": new_w["w"]}, {"loss": loss}
+
+    cfg = LoopConfig(n_steps=30, checkpoint_every=10, checkpoint_dir=d)
+    state = {"w": jnp.zeros(4)}
+    state, stats = run_training(cfg=cfg, state=state, train_step=train_step,
+                                batch_source=batch_source)
+    assert stats.steps == 30
+    assert stats.losses[-1] < stats.losses[0]
+
+    # "crash" and restart: resumes from latest checkpoint, not step 0
+    cfg2 = LoopConfig(n_steps=40, checkpoint_every=10, checkpoint_dir=d)
+    state2, stats2 = run_training(cfg=cfg2, state={"w": jnp.zeros(4)},
+                                  train_step=train_step, batch_source=batch_source)
+    assert stats2.restarts == 1
+    assert stats2.steps == 40 - 30  # only the remaining steps ran
