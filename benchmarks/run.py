@@ -19,12 +19,13 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import bench_end_to_end, bench_feature_extraction, \
-        bench_hierarchy, bench_launch_overhead, roofline
+        bench_hierarchy, bench_ingest, bench_launch_overhead, roofline
 
     suites = [
         ("launch_overhead(TableI)", bench_launch_overhead.run),
         ("feature_extraction(Fig6)", bench_feature_extraction.run),
         ("end_to_end(TableII)", bench_end_to_end.run),
+        ("ingest(shard streaming)", bench_ingest.run),
         ("hierarchy(PS tiers)", bench_hierarchy.run),
         ("roofline", roofline.run),
     ]

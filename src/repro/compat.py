@@ -1,0 +1,86 @@
+"""Feature-detection shims for the installed JAX version.
+
+The production code (``launch/mesh.py``) and the sharding tests construct
+meshes with ``jax.make_mesh(..., axis_types=(jax.sharding.AxisType.Auto,))``.
+``AxisType`` and the ``axis_types=`` kwarg only exist in newer JAX; on the
+pinned older version the attribute is missing and ``make_mesh`` rejects the
+kwarg. Rather than forking every call site, :func:`install` feature-detects
+and backfills both:
+
+* ``jax.sharding.AxisType`` — a stand-in enum with the same member names.
+  ``Auto`` was the only pre-existing behaviour, so ignoring the value is
+  semantically a no-op on old JAX.
+* ``jax.make_mesh`` — wrapped to accept and drop ``axis_types`` when the
+  underlying signature does not take it.
+* ``jax.shard_map`` — aliased from ``jax.experimental.shard_map.shard_map``
+  (mapping the renamed ``check_vma`` kwarg back to ``check_rep``) where the
+  top-level name does not exist yet.
+
+On a JAX that already provides all of these, :func:`install` does nothing.
+"""
+
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+import sys
+
+
+def install(*, require_jax: bool = True) -> None:
+    """Idempotently backfill newer JAX sharding APIs on older versions.
+
+    With ``require_jax=False`` this is a no-op unless jax is already
+    imported — the package ``__init__`` uses that so jax-free consumers
+    (the numpy-only ingest tier) don't pay for a jax import; modules that
+    actually use the patched APIs call ``install()`` unconditionally.
+    """
+    if not require_jax and "jax" not in sys.modules:
+        return
+    import jax
+
+    _install_shard_map(jax)
+
+    if not hasattr(jax.sharding, "AxisType"):
+        class AxisType(enum.Enum):
+            Auto = "auto"
+            Explicit = "explicit"
+            Manual = "manual"
+
+        jax.sharding.AxisType = AxisType
+
+    orig = getattr(jax, "make_mesh", None)
+    if orig is None or getattr(orig, "_repro_compat", False):
+        return  # pre-make_mesh jax: nothing to wrap
+    try:
+        params = inspect.signature(orig).parameters
+    except (TypeError, ValueError):  # pragma: no cover — exotic callables
+        return
+    if "axis_types" in params:
+        return
+
+    @functools.wraps(orig)
+    def make_mesh(axis_shapes, axis_names, *, axis_types=None, **kwargs):
+        del axis_types  # old JAX: Auto is the only (implicit) behaviour
+        return orig(axis_shapes, axis_names, **kwargs)
+
+    make_mesh._repro_compat = True
+    jax.make_mesh = make_mesh
+
+
+def _install_shard_map(jax) -> None:
+    try:
+        if jax.shard_map is not None:  # newer JAX: nothing to do
+            return
+    except AttributeError:
+        pass
+    from jax.experimental.shard_map import shard_map as _exp_shard_map
+
+    @functools.wraps(_exp_shard_map)
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, **kwargs):
+        if check_vma is not None:  # renamed from check_rep
+            kwargs.setdefault("check_rep", check_vma)
+        return _exp_shard_map(f, mesh, in_specs, out_specs, **kwargs)
+
+    shard_map._repro_compat = True
+    jax.shard_map = shard_map

@@ -1,0 +1,45 @@
+"""Streaming shard ingestion (the pipeline's on-disk front end).
+
+FeatureBox's pipeline starts from 15–25 TB of raw ads logs; this package is
+the scaled-down stand-in for that ingest tier:
+
+* :mod:`repro.io.shardfmt` — compact binary record-shard format
+  (``.fbshard``) with checksummed headers covering the three column kinds
+  the FE pipeline uses (dense numeric, ragged int lists, strings).
+* :mod:`repro.io.dataset` — shard discovery, manifests, and deterministic
+  host-sharded assignment so ingestion composes with ``launch/mesh.py``.
+* :mod:`repro.io.stream` — multi-worker prefetching :class:`StreamingLoader`
+  with bounded queues, backpressure, and ingest statistics.
+* :mod:`repro.io.convert` — bulk conversion from ``fe.datagen`` views and
+  ``fe.colstore`` chunks into shards.
+"""
+
+from repro.io.shardfmt import (
+    SHARD_SUFFIX,
+    ShardFormatError,
+    ShardReader,
+    ShardWriter,
+    read_shard,
+    write_shard,
+)
+from repro.io.dataset import ShardDataset, ShardInfo, assign_shards, write_manifest
+from repro.io.stream import IngestStats, StreamingLoader
+from repro.io.convert import colstore_to_shards, views_to_shard, write_view_shards
+
+__all__ = [
+    "IngestStats",
+    "SHARD_SUFFIX",
+    "ShardDataset",
+    "ShardFormatError",
+    "ShardInfo",
+    "ShardReader",
+    "ShardWriter",
+    "StreamingLoader",
+    "assign_shards",
+    "colstore_to_shards",
+    "read_shard",
+    "views_to_shard",
+    "write_manifest",
+    "write_shard",
+    "write_view_shards",
+]

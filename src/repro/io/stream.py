@@ -1,0 +1,251 @@
+"""Multi-worker prefetching shard loader with backpressure accounting.
+
+:class:`StreamingLoader` turns a :class:`~repro.io.dataset.ShardDataset`
+(or a plain list of shard paths) into an iterator of ``{table: columns}``
+environments — exactly the batch shape the FE runners consume — while a
+pool of reader threads keeps the disk busy:
+
+    work queue (shard infos) -> N reader threads -> bounded output queue
+
+The output queue bounds memory (backpressure: readers block when the
+consumer falls behind) and :class:`IngestStats` records where time went:
+
+* ``read_seconds``          — readers doing disk I/O + decode,
+* ``reader_stall_seconds``  — readers blocked on a full queue
+  (consumer-bound: the trainer can't keep up),
+* ``consumer_stall_seconds``— consumer blocked on an empty queue
+  (reader-bound: the disk can't keep up).
+
+Reader-thread exceptions are re-raised in the consumer, so a corrupt shard
+fails the training job instead of silently shrinking the epoch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Any, Callable, Dict, Iterator, List, Mapping, Optional, Sequence, Union
+
+from repro.io.dataset import ShardDataset, ShardInfo
+from repro.io.shardfmt import ShardReader
+
+_WORKER_DONE = object()
+
+
+@dataclasses.dataclass
+class _ReaderError:
+    exc: BaseException
+    shard: str
+
+
+@dataclasses.dataclass
+class IngestStats:
+    shards: int = 0
+    bytes_read: int = 0
+    read_seconds: float = 0.0
+    reader_stall_seconds: float = 0.0
+    consumer_stall_seconds: float = 0.0
+    wall_seconds: float = 0.0
+    max_queue_depth: int = 0
+
+    @property
+    def read_bytes_per_second(self) -> float:
+        """Disk+decode throughput of the reader pool (sum over workers)."""
+        return self.bytes_read / max(self.read_seconds, 1e-9)
+
+    @property
+    def wall_bytes_per_second(self) -> float:
+        """End-to-end ingest throughput as the consumer observed it."""
+        return self.bytes_read / max(self.wall_seconds, 1e-9)
+
+    def summary(self) -> str:
+        return (f"shards={self.shards} bytes={self.bytes_read/2**20:.1f}MiB "
+                f"read={self.read_seconds:.2f}s "
+                f"({self.read_bytes_per_second/2**20:.0f}MiB/s) "
+                f"wall={self.wall_seconds:.2f}s "
+                f"({self.wall_bytes_per_second/2**20:.0f}MiB/s) "
+                f"reader_stall={self.reader_stall_seconds:.2f}s "
+                f"consumer_stall={self.consumer_stall_seconds:.2f}s")
+
+
+class StreamingLoader:
+    """Iterate shard environments with a prefetching reader pool.
+
+    Parameters
+    ----------
+    source:
+        :class:`ShardDataset`, or a sequence of shard paths /
+        :class:`ShardInfo`.
+    workers:
+        Reader threads. 1 gives deterministic shard order; more overlap
+        seeks and decode.
+    prefetch:
+        Output queue capacity (decoded shards held ahead of the consumer).
+    epochs:
+        How many passes over the source to enqueue.
+    shuffle / seed:
+        Per-epoch deterministic shard-order shuffle (datasets only).
+    transform:
+        Optional ``fn(env, info) -> env`` applied in the reader thread, so
+        per-shard host work (filtering, re-batching) overlaps the consumer.
+    verify:
+        Verify payload checksums while decoding (default on).
+    """
+
+    def __init__(self, source: Union[ShardDataset, Sequence],
+                 *, workers: int = 2, prefetch: int = 4, epochs: int = 1,
+                 shuffle: bool = False, seed: int = 0,
+                 transform: Optional[Callable[[Dict[str, Any], ShardInfo],
+                                              Dict[str, Any]]] = None,
+                 verify: bool = True):
+        if workers < 1:
+            raise ValueError(f"workers must be >= 1, got {workers}")
+        if prefetch < 1:
+            raise ValueError(f"prefetch must be >= 1, got {prefetch}")
+        if epochs < 1:
+            raise ValueError(f"epochs must be >= 1, got {epochs}")
+        self.source = source
+        self.workers = workers
+        self.prefetch = prefetch
+        self.epochs = epochs
+        self.shuffle = shuffle
+        self.seed = seed
+        self.transform = transform
+        self.verify = verify
+        self.stats = IngestStats()
+        self._lock = threading.Lock()
+        self._stop = threading.Event()
+        self._threads: List[threading.Thread] = []
+        self._out: Optional[queue.Queue] = None
+        self._running = False
+
+    # ------------------------------------------------------------- plumbing
+    def _shard_plan(self) -> List[ShardInfo]:
+        plan: List[ShardInfo] = []
+        for epoch in range(self.epochs):
+            if isinstance(self.source, ShardDataset):
+                plan.extend(self.source.epoch_order(
+                    epoch, shuffle=self.shuffle, seed=self.seed))
+            else:
+                items = list(self.source)
+                for i, it in enumerate(items):
+                    if not isinstance(it, ShardInfo):
+                        import os
+                        it = ShardInfo(path=str(it),
+                                       nbytes=os.path.getsize(str(it)),
+                                       n_rows=0, seq=i)
+                    plan.append(it)
+        return plan
+
+    def _reader(self, work: "queue.Queue", out: "queue.Queue") -> None:
+        info: Optional[ShardInfo] = None
+        try:
+            while not self._stop.is_set():
+                try:
+                    info = work.get_nowait()
+                except queue.Empty:
+                    break
+                t0 = time.perf_counter()
+                reader = ShardReader(info.path, verify=self.verify)
+                env = reader.read_all()
+                if self.transform is not None:
+                    env = self.transform(env, info)
+                dt = time.perf_counter() - t0
+                with self._lock:
+                    self.stats.shards += 1
+                    self.stats.bytes_read += reader.nbytes
+                    self.stats.read_seconds += dt
+                self._put(out, env)
+        except BaseException as e:  # propagate to the consumer
+            self._put(out, _ReaderError(e, info.path if info else "?"),
+                      force=True)
+        finally:
+            self._put(out, _WORKER_DONE, force=True)
+
+    def _put(self, out: "queue.Queue", item: Any, *, force: bool = False) -> None:
+        """Bounded put that respects close(); stall time is backpressure.
+
+        After close() the consumer is gone, so every put (sentinels
+        included) aborts rather than spinning on a full queue.
+        """
+        t0 = time.perf_counter()
+        while True:
+            try:
+                out.put(item, timeout=0.05)
+                break
+            except queue.Full:
+                if self._stop.is_set():
+                    return
+        stall = time.perf_counter() - t0
+        if stall > 1e-4 and not force:
+            with self._lock:
+                self.stats.reader_stall_seconds += stall
+
+    # ------------------------------------------------------------ iteration
+    def __iter__(self) -> Iterator[Dict[str, Any]]:
+        if self._running:
+            raise RuntimeError("StreamingLoader is already being iterated")
+        # Fresh stats per pass: a reused loader must not blend a prior
+        # (possibly abandoned) pass into this run's throughput numbers.
+        self.stats = IngestStats()
+        plan = self._shard_plan()
+        work: "queue.Queue" = queue.Queue()
+        for info in plan:
+            work.put(info)
+        # DONE sentinels flow through the bounded queue too, so capacity
+        # must fit them even when every worker finishes at once.
+        out: "queue.Queue" = queue.Queue(
+            maxsize=max(self.prefetch, self.workers))
+        n_workers = min(self.workers, max(1, len(plan)))
+        self._stop.clear()
+        self._out = out
+        self._threads = [
+            threading.Thread(target=self._reader, args=(work, out),
+                             daemon=True, name=f"shard-reader-{i}")
+            for i in range(n_workers)
+        ]
+        self._running = True
+        t_start = time.perf_counter()
+        for t in self._threads:
+            t.start()
+        done = 0
+        try:
+            while done < n_workers:
+                t0 = time.perf_counter()
+                item = out.get()
+                stall = time.perf_counter() - t0
+                if stall > 1e-4:
+                    self.stats.consumer_stall_seconds += stall
+                self.stats.max_queue_depth = max(self.stats.max_queue_depth,
+                                                 out.qsize() + 1)
+                if item is _WORKER_DONE:
+                    done += 1
+                    continue
+                if isinstance(item, _ReaderError):
+                    raise RuntimeError(
+                        f"shard reader failed on {item.shard}") from item.exc
+                yield item
+        finally:
+            self.stats.wall_seconds += time.perf_counter() - t_start
+            self.close()
+
+    def close(self) -> None:
+        """Stop readers and release queue slots (idempotent).
+
+        Readers may refill the queue between drains (a shard decode was in
+        flight), so drain-and-join loops until every thread has exited.
+        """
+        self._stop.set()
+        for t in self._threads:
+            while t.is_alive():
+                if self._out is not None:
+                    try:
+                        while True:
+                            self._out.get_nowait()
+                    except queue.Empty:
+                        pass
+                t.join(timeout=0.1)
+        self._threads = []
+        self._running = False

@@ -101,7 +101,8 @@ def run_cell(arch_id: str, shape: str, *, multi_pod: bool = False,
         t_compile = time.time() - t0
 
     ma = compiled.memory_analysis()
-    ca = compiled.cost_analysis() or {}
+    from repro.launch.hlo_stats import cost_analysis_dict
+    ca = cost_analysis_dict(compiled)  # dict on every JAX version
     hlo = compiled.as_text()
     colls = collective_bytes(hlo)
 

@@ -54,6 +54,24 @@ _FREE_OPS = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
              "after-all", "partition-id", "replica-id"}
 
 
+def cost_analysis_dict(compiled) -> Dict[str, float]:
+    """``compiled.cost_analysis()`` normalized to a flat dict.
+
+    Newer JAX returns a dict; older versions return a list with one dict
+    per partitioned computation. Merge by summing shared keys so callers
+    can index ``["flops"]`` on either.
+    """
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, dict):
+        return ca
+    merged: Dict[str, float] = {}
+    for entry in ca:
+        for k, v in (entry or {}).items():
+            if isinstance(v, (int, float)):
+                merged[k] = merged.get(k, 0.0) + v
+    return merged
+
+
 def _shape_bytes(shape_str: str) -> int:
     total = 0
     for dt, dims in _SHAPE_RE.findall(shape_str):

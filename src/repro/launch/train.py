@@ -6,15 +6,26 @@ FE pipeline (recsys archs), jitted train step, async checkpointing, restart.
 On a real TPU cluster the same driver runs the full config by passing
 ``--full`` (the step functions and shardings are the dry-run-validated ones).
 
+Two batch sources:
+
+* default — in-memory ``synthetic_batch`` per step (no disk in the loop);
+* ``--data-dir DIR`` (recsys only) — stream ``.fbshard`` raw-log shards
+  through the FeatureBox FE schedule with ``repro.io.StreamingLoader``:
+  reader threads pull shards off disk, the FE worker extracts features for
+  batch i+1 while the device trains on batch i. Regenerate shards with
+  ``repro.fe.datagen.write_log_shards`` (see ``--gen-shards``).
+
 Examples:
   PYTHONPATH=src python -m repro.launch.train --arch dlrm-mlperf --steps 50
   PYTHONPATH=src python -m repro.launch.train --arch yi-9b --steps 10
-  PYTHONPATH=src python -m repro.launch.train --arch pna --steps 20
+  PYTHONPATH=src python -m repro.launch.train --arch dlrm-mlperf \
+      --data-dir /tmp/adslog --gen-shards 8 --steps 16
 """
 
 from __future__ import annotations
 
 import argparse
+import itertools
 import time
 from typing import Any, Dict
 
@@ -53,6 +64,108 @@ def synthetic_batch(family: str, cfg, batch: int, step: int) -> Dict[str, Any]:
     return {k: jnp.asarray(v) for k, v in g.items()}
 
 
+def fe_env_to_model_batch(env: Dict[str, Any], cfg) -> Dict[str, Any]:
+    """Adapt FE-pipeline outputs to a recsys model batch.
+
+    The FE graph emits a fixed layout (9 dense feats, 8 global sparse
+    fields, 48 seq positions); the arch config may want a different width,
+    so columns are tiled / re-hashed into the config's field vocabularies.
+    """
+    dense = np.asarray(env["batch_dense"], np.float32)
+    sparse = np.asarray(env["batch_sparse"], np.int64)
+    fields = [sparse[:, i % sparse.shape[1]] % cfg.vocab_sizes[i]
+              for i in range(cfg.n_sparse)]
+    batch: Dict[str, Any] = {
+        "sparse": jnp.asarray(np.stack(fields, axis=1).astype(np.int32)),
+        "label": jnp.asarray(np.asarray(env["batch_label"], np.float32)),
+    }
+    if cfg.n_dense:
+        reps = -(-cfg.n_dense // dense.shape[1])  # ceil
+        batch["dense"] = jnp.asarray(
+            np.tile(dense, (1, reps))[:, :cfg.n_dense])
+    if cfg.kind == "bst":
+        seq = np.asarray(env["batch_seq_ids"], np.int64)
+        reps = -(-cfg.seq_len // seq.shape[1])
+        batch["seq"] = jnp.asarray(
+            (np.tile(seq, (1, reps))[:, :cfg.seq_len]
+             % cfg.vocab_sizes[0]).astype(np.int32))
+    return batch
+
+
+def run_streaming(args, spec, cfg, train_step, state) -> None:
+    """Stream raw-log shards from disk through FE into the train step."""
+    from repro.core import PipelinedRunner, build_schedule, compile_layers
+    from repro.fe.pipeline_graph import build_fe_graph
+    from repro.io.dataset import ShardDataset
+    from repro.io.stream import StreamingLoader
+
+    if spec.family != "recsys":
+        raise SystemExit(
+            f"--data-dir streaming runs the ads FE pipeline and is only "
+            f"wired for recsys archs (got family={spec.family!r})")
+
+    if args.gen_shards:
+        from repro.fe.datagen import write_log_shards
+        paths = write_log_shards(args.data_dir, n_shards=args.gen_shards,
+                                 rows_per_shard=args.batch, seed=0)
+        print(f"wrote {len(paths)} shards to {args.data_dir}")
+
+    ds = ShardDataset(args.data_dir, host_id=args.host_id,
+                      n_hosts=args.n_hosts)
+    if not len(ds):
+        raise SystemExit(
+            f"host {args.host_id}/{args.n_hosts} got no shards: the dataset "
+            f"has only {len(ds.shards)} shard(s); generate more or use "
+            f"fewer hosts")
+    epochs = -(-args.steps // len(ds))  # enough passes for --steps
+    loader = StreamingLoader(ds, workers=args.stream_workers,
+                             prefetch=args.stream_prefetch, epochs=epochs,
+                             shuffle=True, seed=0)
+    layers = compile_layers(build_schedule(build_fe_graph()))
+    ckpt = (CheckpointManager(args.checkpoint_dir)
+            if args.checkpoint_dir else None)
+
+    losses = []
+
+    def step_fn(state, env):
+        batch = fe_env_to_model_batch(env, cfg)
+        p, o, m = train_step(state["params"], state["opt"], batch)
+        losses.append(float(m["loss"]))
+        state = {"params": p, "opt": o}
+        if ckpt is not None and len(losses) % args.checkpoint_every == 0:
+            ckpt.save_async(len(losses) - 1, state)
+        return state
+
+    runner = PipelinedRunner(layers, step_fn, prefetch=args.stream_prefetch)
+    shard_iter = iter(loader)  # kept so the generator can be closed below
+    t0 = time.perf_counter()
+    try:
+        runner.run(state, itertools.islice(shard_iter, args.steps))
+    finally:
+        # Close the generator explicitly (its finally finalizes the
+        # loader's wall-clock stats) before stopping the reader pool —
+        # islice abandonment alone leaves that to garbage collection.
+        try:
+            shard_iter.close()
+        except ValueError:  # FE worker still holds it (join timed out)
+            pass
+        loader.close()
+        if ckpt is not None:
+            ckpt.wait()
+    # islice hides the loader from the runner's duck-typed stats capture
+    runner.stats.ingest = loader.stats
+    dt = time.perf_counter() - t0
+    s = runner.stats
+    if not losses:
+        raise SystemExit("streaming run consumed no batches")
+    print(f"arch={args.arch} mode=streaming steps={s.batches} "
+          f"loss {losses[0]:.4f} -> {losses[-1]:.4f} "
+          f"({dt:.1f}s, {dt/max(s.batches,1)*1e3:.1f} ms/step; "
+          f"fe={s.fe_seconds:.2f}s train={s.train_seconds:.2f}s "
+          f"wall={s.wall_seconds:.2f}s)")
+    print(f"ingest: {loader.stats.summary()}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True, choices=list_archs())
@@ -61,6 +174,16 @@ def main() -> None:
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--checkpoint-every", type=int, default=25)
+    # streaming-ingest mode (repro.io)
+    ap.add_argument("--data-dir", default=None,
+                    help="stream .fbshard raw-log shards instead of "
+                         "in-memory synthetic batches (recsys only)")
+    ap.add_argument("--gen-shards", type=int, default=0,
+                    help="generate this many shards into --data-dir first")
+    ap.add_argument("--stream-workers", type=int, default=2)
+    ap.add_argument("--stream-prefetch", type=int, default=4)
+    ap.add_argument("--host-id", type=int, default=0)
+    ap.add_argument("--n-hosts", type=int, default=1)
     args = ap.parse_args()
 
     spec = get_arch(args.arch)
@@ -86,6 +209,10 @@ def main() -> None:
         opt_state = opt.init(params)
 
     state = {"params": params, "opt": opt_state}
+
+    if args.data_dir:
+        run_streaming(args, spec, cfg, train_step, state)
+        return
 
     def step_wrapper(state, batch):
         p, o, m = train_step(state["params"], state["opt"], batch)

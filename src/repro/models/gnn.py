@@ -28,6 +28,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
+
+compat.install()  # jax.shard_map on older jax
+
 from repro.models.common import he_init, mlp, sigmoid_bce, softmax_xent
 
 Params = Dict[str, Any]

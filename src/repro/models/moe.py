@@ -25,6 +25,11 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro import compat
+
+compat.install()  # jax.shard_map on older jax
+
 from jax.sharding import PartitionSpec as P
 
 from repro.models.common import dense

@@ -3,12 +3,14 @@
 import os
 import tempfile
 
-import hypothesis
-import hypothesis.strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
+
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.embedding import (
     HierarchicalPS,

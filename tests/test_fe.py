@@ -3,11 +3,13 @@
 import json
 import tempfile
 
-import hypothesis
-import hypothesis.strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
+
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import build_schedule, compile_layers, run_layers, validate_schedule
 from repro.fe.colstore import ColumnStore, RaggedColumn

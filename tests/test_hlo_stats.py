@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.launch.hlo_stats import analyze_hlo
+from repro.launch.hlo_stats import analyze_hlo, cost_analysis_dict
 
 
 def _compile(fn, *args):
@@ -32,7 +32,8 @@ def test_scan_equals_unroll_after_correction():
     c_scan = _compile(scanned, x)
     c_unr = _compile(unrolled, x)
     # sanity: cost_analysis itself undercounts the scan (the bug we fix)
-    assert c_scan.cost_analysis()["flops"] < c_unr.cost_analysis()["flops"] / 4
+    assert (cost_analysis_dict(c_scan)["flops"]
+            < cost_analysis_dict(c_unr)["flops"] / 4)
 
     t_scan = analyze_hlo(c_scan.as_text())
     t_unr = analyze_hlo(c_unr.as_text())
@@ -40,9 +41,10 @@ def test_scan_equals_unroll_after_correction():
     assert t_scan.flops == expected_flops
     assert t_unr.flops == expected_flops
     # analyzer flops match XLA's on the unrolled graph (no loops involved)
-    assert t_unr.flops == pytest.approx(c_unr.cost_analysis()["flops"], rel=0.01)
+    assert t_unr.flops == pytest.approx(cost_analysis_dict(c_unr)["flops"], rel=0.01)
     # bytes: within 2x of XLA accounting (copy/layout ops differ slightly)
-    assert t_unr.bytes == pytest.approx(c_unr.cost_analysis()["bytes accessed"], rel=1.0)
+    assert t_unr.bytes == pytest.approx(
+        cost_analysis_dict(c_unr)["bytes accessed"], rel=1.0)
 
 
 def test_nested_loops_multiply():

@@ -1,0 +1,316 @@
+"""repro.io: shard format roundtrip, host assignment, streaming loader."""
+
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.fe.colstore import RaggedColumn
+from repro.fe.datagen import gen_views, write_log_shards
+from repro.io.dataset import (
+    MANIFEST_NAME,
+    ShardDataset,
+    ShardInfo,
+    assign_shards,
+    write_manifest,
+)
+from repro.io.shardfmt import (
+    ShardFormatError,
+    ShardReader,
+    ShardWriter,
+    read_shard,
+    write_shard,
+)
+from repro.io.stream import StreamingLoader
+
+
+# ------------------------------------------------------------------ helpers
+def _assert_columns_equal(a, b):
+    if isinstance(a, RaggedColumn):
+        assert isinstance(b, RaggedColumn)
+        np.testing.assert_array_equal(a.values, b.values)
+        np.testing.assert_array_equal(a.lengths, b.lengths)
+        assert b.values.dtype == a.values.dtype
+    elif np.asarray(a).dtype == object:
+        assert list(np.asarray(a)) == list(np.asarray(b))
+    else:
+        arr_a, arr_b = np.asarray(a), np.asarray(b)
+        assert arr_b.dtype == arr_a.dtype
+        np.testing.assert_array_equal(arr_a, arr_b)  # NaN-tolerant
+
+
+def _mixed_table():
+    """All three column kinds with the nasty cases: null sentinels, NaN,
+    empty ragged rows, empty strings, unicode, 2-D dense."""
+    null_int = np.iinfo(np.int64).min
+    return {
+        "ids": np.array([1, 2, null_int, 4], np.int64),
+        "score": np.array([0.5, np.nan, -1.0, np.inf], np.float32),
+        "emb": np.arange(8, dtype=np.float32).reshape(4, 2),
+        "tags": RaggedColumn(
+            values=np.array([7, 8, 9], np.int64),
+            lengths=np.array([2, 0, 0, 1], np.int32),  # empty rows
+        ),
+        "text": np.array(["", "héllo wörld", "a b c", "🙂"], dtype=object),
+    }
+
+
+# ---------------------------------------------------------------- shard fmt
+def test_shard_roundtrip_all_column_kinds(tmp_path):
+    tables = {"t": _mixed_table(),
+              "side": {"k": np.array([10, 20], np.int64)}}
+    path = write_shard(str(tmp_path / "s"), tables)
+    assert path.endswith(".fbshard")
+    got = read_shard(path)
+    assert set(got) == {"t", "side"}
+    for tname, cols in tables.items():
+        for cname, col in cols.items():
+            _assert_columns_equal(col, got[tname][cname])
+
+
+def test_shard_roundtrip_gen_views_bit_exact(tmp_path):
+    views = gen_views(128, seed=3)
+    path = write_shard(str(tmp_path / "v"), views)
+    got = read_shard(path)
+    for vname, cols in views.items():
+        for cname, col in cols.items():
+            _assert_columns_equal(col, got[vname][cname])
+
+
+def test_shard_column_projection_and_metadata(tmp_path):
+    path = write_shard(str(tmp_path / "s"), {"t": _mixed_table()},
+                       meta={"seq": 7})
+    r = ShardReader(path)
+    assert r.meta["seq"] == 7
+    assert r.n_rows("t") == 4
+    sub = r.read_table("t", ["ids", "text"])
+    assert set(sub) == {"ids", "text"}
+    with pytest.raises(KeyError):
+        r.read_table("t", ["nope"])
+    with pytest.raises(KeyError):
+        r.read_table("missing_table")
+
+
+def test_shard_string_column_preserves_shape(tmp_path):
+    col = np.array([["a", "bb"], ["", "dd"]], dtype=object)
+    dense = np.array([1, 2], np.int64)  # 2 rows, same as col.shape[0]
+    path = write_shard(str(tmp_path / "s"), {"t": {"s": col, "d": dense}})
+    got = read_shard(path)["t"]["s"]
+    assert got.shape == (2, 2)
+    assert [list(r) for r in got] == [["a", "bb"], ["", "dd"]]
+
+
+def test_shard_rejects_non_string_objects(tmp_path):
+    """str(None)/str(b"..") reprs must not silently replace payloads."""
+    for bad in (np.array([None, "ok"], dtype=object),
+                np.array([b"bytes", "ok"], dtype=object),
+                np.array([3, "ok"], dtype=object)):
+        with pytest.raises(ShardFormatError, match="only str"):
+            write_shard(str(tmp_path / "bad"), {"t": {"c": bad}})
+
+
+def test_shard_rejects_row_count_mismatch(tmp_path):
+    w = ShardWriter(str(tmp_path / "bad"))
+    with pytest.raises(ShardFormatError):
+        w.add_table("t", {"a": np.zeros(3), "b": np.zeros(4)})
+    w.abort()
+
+
+def test_shard_detects_payload_corruption(tmp_path):
+    path = write_shard(str(tmp_path / "s"), {"t": _mixed_table()})
+    data = bytearray(open(path, "rb").read())
+    data[40] ^= 0xFF  # flip a byte inside the payload region
+    with open(path, "wb") as f:
+        f.write(data)
+    with pytest.raises(ShardFormatError):
+        ShardReader(path).read_all()
+    # verify=False skips payload CRCs (index CRC still guards structure)
+    ShardReader(path, verify=False)
+
+
+def test_shard_detects_truncation(tmp_path):
+    path = write_shard(str(tmp_path / "s"), {"t": _mixed_table()})
+    data = open(path, "rb").read()
+    with open(path, "wb") as f:
+        f.write(data[:-10])
+    with pytest.raises(ShardFormatError):
+        ShardReader(path)
+
+
+def test_writer_abort_leaves_no_file(tmp_path):
+    path = str(tmp_path / "gone")
+    try:
+        with ShardWriter(path) as w:
+            w.add_table("t", {"a": np.zeros(2)})
+            raise RuntimeError("boom")
+    except RuntimeError:
+        pass
+    assert os.listdir(tmp_path) == []  # no shard, no .tmp left behind
+
+
+# ------------------------------------------------------------------ dataset
+def test_assignment_is_disjoint_cover():
+    shards = [ShardInfo(path=f"s{i}", nbytes=1, n_rows=1, seq=i)
+              for i in range(11)]
+    for n_hosts in (1, 2, 3, 5, 11, 13):
+        parts = [assign_shards(shards, h, n_hosts) for h in range(n_hosts)]
+        flat = [s.seq for p in parts for s in p]
+        assert sorted(flat) == list(range(11))          # cover, no dupes
+        sizes = [len(p) for p in parts]
+        assert max(sizes) - min(sizes) <= 1             # balanced
+    with pytest.raises(ValueError):
+        assign_shards(shards, 3, 3)
+    with pytest.raises(ValueError):
+        assign_shards(shards, 0, 0)
+
+
+def test_dataset_discovery_manifest_and_scan(tmp_path):
+    d = str(tmp_path)
+    paths = write_log_shards(d, n_shards=5, rows_per_shard=64, seed=1)
+    assert len(paths) == 5
+    ds = ShardDataset(d)  # via manifest
+    assert len(ds.shards) == 5 and ds.total_rows == 5 * 64
+    os.remove(os.path.join(d, MANIFEST_NAME))
+    ds2 = ShardDataset(d)  # via directory scan
+    assert [s.name for s in ds2.shards] == [s.name for s in ds.shards]
+    assert ds2.total_rows == ds.total_rows
+
+    # host views partition the shard set
+    a = ShardDataset(d, host_id=0, n_hosts=2)
+    b = ShardDataset(d, host_id=1, n_hosts=2)
+    names = sorted(s.name for s in a.local_shards) + \
+        sorted(s.name for s in b.local_shards)
+    assert sorted(names) == sorted(s.name for s in ds.shards)
+
+
+def test_epoch_order_deterministic_shuffle(tmp_path):
+    d = str(tmp_path)
+    write_log_shards(d, n_shards=6, rows_per_shard=32)
+    ds = ShardDataset(d)
+    e0 = [s.seq for s in ds.epoch_order(0, shuffle=True, seed=7)]
+    assert e0 == [s.seq for s in ds.epoch_order(0, shuffle=True, seed=7)]
+    assert sorted(e0) == list(range(6))
+    e1 = [s.seq for s in ds.epoch_order(1, shuffle=True, seed=7)]
+    assert e0 != e1  # epochs reshuffle
+
+
+def test_colstore_to_shards_non_contiguous_chunk_ids(tmp_path):
+    """Chunk ids parsed from dir names need not start at 0 — every chunk
+    must land in exactly one shard (no silent dup/drop)."""
+    from repro.fe.colstore import ColumnStore
+    from repro.io.convert import colstore_to_shards
+
+    store = ColumnStore(str(tmp_path / "cs"))
+    for cid in (3, 5, 9):  # deliberately non-contiguous, non-zero-based
+        store.write_chunk("impressions", cid,
+                          {"instance_id": np.array([cid * 10], np.int64)})
+        store.write_chunk("user_profile", cid,
+                          {"user_id": np.array([cid], np.int64)})
+    paths = colstore_to_shards(
+        store, str(tmp_path / "out"),
+        {"impressions": ["instance_id"], "user_profile": ["user_id"]})
+    assert len(paths) == 3
+    got = sorted(int(read_shard(p)["impressions"]["instance_id"][0])
+                 for p in paths)
+    assert got == [30, 50, 90]
+    ds = ShardDataset(str(tmp_path / "out"))  # manifest written, rows right
+    assert ds.total_rows == 3
+
+
+# ------------------------------------------------------------------- stream
+def test_streaming_loader_yields_every_shard_once(tmp_path):
+    d = str(tmp_path)
+    write_log_shards(d, n_shards=6, rows_per_shard=64, seed=5)
+    loader = StreamingLoader(ShardDataset(d), workers=3, prefetch=2)
+    seen = [env["impressions"]["instance_id"] for env in loader]
+    assert len(seen) == 6
+    s = loader.stats
+    assert s.shards == 6 and s.bytes_read > 0 and s.read_seconds > 0
+
+
+def test_streaming_loader_single_worker_is_ordered(tmp_path):
+    d = str(tmp_path)
+    write_log_shards(d, n_shards=4, rows_per_shard=32, seed=2)
+    loader = StreamingLoader(ShardDataset(d), workers=1, prefetch=1)
+    got = [int(env["impressions"]["user_id"][0]) for env in loader]
+    want = [int(gen_views(32, seed=2 + i)["impressions"]["user_id"][0])
+            for i in range(4)]
+    assert got == want
+
+
+def test_streaming_loader_propagates_reader_errors(tmp_path):
+    d = str(tmp_path)
+    paths = write_log_shards(d, n_shards=3, rows_per_shard=32)
+    data = bytearray(open(paths[1], "rb").read())
+    data[40] ^= 0xFF
+    with open(paths[1], "wb") as f:
+        f.write(data)
+    loader = StreamingLoader(ShardDataset(d), workers=2, prefetch=2)
+    with pytest.raises(RuntimeError, match="shard reader failed") as ei:
+        list(loader)
+    assert isinstance(ei.value.__cause__, ShardFormatError)
+
+
+def test_streaming_loader_early_abandonment_releases_readers(tmp_path):
+    """Abandoning iteration mid-stream must not leak spinning readers,
+    even when in-flight decodes outnumber the queue capacity."""
+    import threading
+    import time as _time
+
+    d = str(tmp_path)
+    write_log_shards(d, n_shards=8, rows_per_shard=16)
+    loader = StreamingLoader(ShardDataset(d), workers=4, prefetch=2)
+    it = iter(loader)
+    next(it)
+    t0 = _time.perf_counter()
+    it.close()  # generator finally -> loader.close()
+    assert _time.perf_counter() - t0 < 2.0, "close() stalled on readers"
+    assert not [t for t in threading.enumerate()
+                if t.name.startswith("shard-reader")]
+    # reusable for a fresh full pass, with stats of THIS pass only
+    assert sum(1 for _ in loader) == 8
+    assert loader.stats.shards == 8
+
+
+def test_streaming_loader_epochs_and_transform(tmp_path):
+    d = str(tmp_path)
+    write_log_shards(d, n_shards=2, rows_per_shard=16)
+    loader = StreamingLoader(
+        ShardDataset(d), workers=1, epochs=3,
+        transform=lambda env, info: {"n": len(env["impressions"]["user_id"]),
+                                     "seq": info.seq})
+    envs = list(loader)
+    assert len(envs) == 6
+    assert all(e["n"] == 16 for e in envs)
+
+
+def test_runners_consume_loader_and_capture_ingest_stats(tmp_path):
+    """PipelinedRunner fed from disk == staged fed from disk, and the
+    pipelined run attaches IngestStats (paper: disk+FE overlap training)."""
+    from repro.core import PipelinedRunner, StagedRunner, build_schedule, \
+        compile_layers
+    from repro.fe.pipeline_graph import build_fe_graph
+
+    d = str(tmp_path / "log")
+    write_log_shards(d, n_shards=3, rows_per_shard=48, seed=9)
+    layers = compile_layers(build_schedule(build_fe_graph()))
+
+    def step(state, env):
+        s = float(np.asarray(env["batch_dense"]).sum()) + float(
+            np.asarray(env["batch_sparse"]).sum())
+        return {"sum": state["sum"] + s, "batches": state["batches"] + 1}
+
+    pipe = PipelinedRunner(layers, step, prefetch=2)
+    s1 = pipe.run({"sum": 0.0, "batches": 0},
+                  StreamingLoader(ShardDataset(d), workers=2))
+    staged = StagedRunner(layers, step, workdir=str(tmp_path / "staged"))
+    s2 = staged.run({"sum": 0.0, "batches": 0},
+                    StreamingLoader(ShardDataset(d), workers=1))
+
+    assert s1["batches"] == s2["batches"] == 3
+    np.testing.assert_allclose(s1["sum"], s2["sum"], rtol=1e-6)
+    assert pipe.stats.ingest is not None
+    assert pipe.stats.ingest.bytes_read > 0
+    assert pipe.stats.intermediate_bytes == 0
+    assert staged.stats.intermediate_bytes > 10_000

@@ -1,10 +1,12 @@
 """Alg. 1 allocator invariants: host pool, jnp planner, Pallas kernel agree."""
 
-import hypothesis
-import hypothesis.strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
+
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core.mempool import ALIGN, ArenaPool, align_up, plan_offsets, required_capacity
 from repro.kernels.mempool_alloc.ops import plan_allocation

@@ -68,6 +68,28 @@ def test_pipelined_overlaps_host_and_device():
         f"wall={pipe.stats.wall_seconds:.3f}")
 
 
+def test_train_step_error_releases_fe_worker():
+    """A failing train_step must not leave the FE worker blocked on a full
+    prefetch queue (thread + decoded-batch leak per failed run)."""
+    import threading
+    import time
+
+    layers = compile_layers(build_schedule(build_fe_graph()))
+
+    def bad_step(state, env):
+        raise ValueError("train blew up")
+
+    pipe = PipelinedRunner(layers, bad_step, prefetch=1)
+    import pytest
+    with pytest.raises(ValueError, match="train blew up"):
+        pipe.run({}, [dict(b) for b in _batches(4)])
+    deadline = time.perf_counter() + 5.0
+    while time.perf_counter() < deadline and any(
+            t.name == "fe-worker" for t in threading.enumerate()):
+        time.sleep(0.05)
+    assert not [t for t in threading.enumerate() if t.name == "fe-worker"]
+
+
 def test_pipeline_propagates_worker_errors():
     layers = compile_layers(build_schedule(build_fe_graph()))
     pipe = PipelinedRunner(layers, lambda s, e: s)

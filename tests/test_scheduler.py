@@ -1,10 +1,12 @@
 """Layer-wise scheduler: DAG properties (paper Fig. 4), incl. hypothesis."""
 
-import hypothesis
-import hypothesis.strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
+
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import (
     Device,
