@@ -15,9 +15,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import PipelinedRunner, StagedRunner, build_schedule, compile_layers
+from repro.core import PipelinedRunner, StagedRunner
+from repro.fe import featureplan, get_spec
 from repro.fe.datagen import gen_views
-from repro.fe.pipeline_graph import N_DENSE_FEATS, N_SPARSE_FIELDS, build_fe_graph
 from repro.models.common import sigmoid_bce
 from repro.train.optimizer import adamw
 
@@ -25,8 +25,12 @@ TABLE = 32 * 1024
 DIM = 16
 
 
-def _model(key):
-    d_in = N_DENSE_FEATS + N_SPARSE_FIELDS * DIM + DIM
+def _ads_plan():
+    return featureplan.compile(get_spec("ads_ctr"))
+
+
+def _model(key, layout):
+    d_in = layout.n_dense_feats + layout.n_sparse_fields * DIM + DIM
     return {
         "embed": jax.random.normal(key, (TABLE, DIM)) * 0.05,
         "w1": jax.random.normal(jax.random.fold_in(key, 1), (d_in, 64)) * 0.05,
@@ -69,12 +73,13 @@ def _make_train_step():
 
 
 def run(n_batches: int = 8, rows: int = 2048) -> List[Dict]:
-    layers = compile_layers(build_schedule(build_fe_graph()))
+    plan = _ads_plan()
+    layers = plan.layers
     batches = [gen_views(rows, seed=10 + i) for i in range(n_batches)]
     key = jax.random.PRNGKey(0)
 
     step, opt = _make_train_step()
-    params = _model(key)
+    params = _model(key, plan.layout)
     state = {"p": params, "s": opt.init(params)}
     pipe = PipelinedRunner(layers, step, prefetch=2)
     pipe.run(dict(state), [dict(b) for b in batches])  # includes warmup trace

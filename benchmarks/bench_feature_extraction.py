@@ -3,7 +3,9 @@
 The paper splits FE time into pre-processing (read/clean/join — host/IO) and
 extraction (the compute). Here: host-layer seconds vs device-layer seconds
 through the scheduled pipeline, fused vs unfused, per 10k instances (the
-paper's unit).
+paper's unit) — plus one total-extraction row per bundled scenario preset
+(ads_ctr / dlrm / bst), since feature iteration across scenarios is the
+point of the declarative front end.
 """
 
 from __future__ import annotations
@@ -11,19 +13,14 @@ from __future__ import annotations
 import time
 from typing import Dict, List
 
-from repro.core import (
-    ExecutionStats,
-    build_schedule,
-    compile_layers,
-    run_layers,
-    run_unfused,
-)
+from repro.core import ExecutionStats, run_layers, run_unfused
+from repro.fe import featureplan, get_spec, list_specs
 from repro.fe.datagen import gen_views
-from repro.fe.pipeline_graph import build_fe_graph
 
 
 def run(instances: int = 10_000, iters: int = 5) -> List[Dict]:
-    layers = compile_layers(build_schedule(build_fe_graph()))
+    plan = featureplan.compile(get_spec("ads_ctr"))
+    layers = plan.layers
     views = gen_views(instances, seed=0)
     run_layers(layers, dict(views))  # warm
 
@@ -41,7 +38,7 @@ def run(instances: int = 10_000, iters: int = 5) -> List[Dict]:
         run_unfused(layers, dict(views), stats=s2)
     dt_unf = (time.perf_counter() - t0) / iters
 
-    return [
+    rows = [
         {"name": "fe10k_preprocess_host", "us_per_call": pre * 1e6,
          "derived": f"{pre/dt*100:.0f}% of FE wall"},
         {"name": "fe10k_extract_device_fused", "us_per_call": ext * 1e6,
@@ -52,3 +49,22 @@ def run(instances: int = 10_000, iters: int = 5) -> List[Dict]:
          "derived": f"fused is {dt_unf/dt:.2f}x faster "
                     f"({s2.n_device_dispatches//iters} dispatches)"},
     ]
+
+    # one row per scenario preset: cost of switching feature definitions
+    for name in list_specs():
+        p = featureplan.compile(get_spec(name))
+        run_layers(p.layers, dict(views))  # warm (trace + compile)
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            run_layers(p.layers, dict(views))
+        d = (time.perf_counter() - t0) / iters
+        lay = p.layout
+        rows.append({
+            "name": f"fe10k_spec_{name}",
+            "us_per_call": d * 1e6,
+            "derived": f"{instances/d:.0f} instances/s; "
+                       f"{lay.n_sparse_fields}sp/{lay.n_dense_feats}dn/"
+                       f"{lay.seq_len}seq; "
+                       f"{p.schedule.n_device_dispatches} dispatches",
+        })
+    return rows

@@ -5,7 +5,10 @@ Measures the ``repro.io`` tier end to end:
 1. shard write throughput (``fe.datagen.write_log_shards``),
 2. raw single-thread ``ShardReader`` throughput,
 3. ``StreamingLoader`` throughput vs worker count (reader-pool scaling),
-4. pipelined vs staged wall time with disk reads in the loop — the Table II
+4. projection pushdown: columns/bytes decoded with vs without each
+   ``FeaturePlan.required_columns`` projection (untouched columns are
+   never decoded from disk),
+5. pipelined vs staged wall time with disk reads in the loop — the Table II
    comparison, but starting from on-disk raw-log shards instead of
    in-memory views, so the I/O the paper eliminates is actually present at
    the front of the pipeline.
@@ -20,10 +23,10 @@ from typing import Dict, List
 
 import jax
 
-from benchmarks.bench_end_to_end import _make_train_step, _model
-from repro.core import PipelinedRunner, StagedRunner, build_schedule, compile_layers
+from benchmarks.bench_end_to_end import _ads_plan, _make_train_step, _model
+from repro.core import PipelinedRunner, StagedRunner
+from repro.fe import featureplan, get_spec, list_specs
 from repro.fe.datagen import write_log_shards
-from repro.fe.pipeline_graph import build_fe_graph
 from repro.io.dataset import ShardDataset
 from repro.io.shardfmt import ShardReader
 from repro.io.stream import StreamingLoader
@@ -32,9 +35,10 @@ N_SHARDS = 8
 ROWS = 1024
 
 
-def _loader(data_dir: str, workers: int, prefetch: int = 4) -> StreamingLoader:
+def _loader(data_dir: str, workers: int, prefetch: int = 4,
+            columns=None) -> StreamingLoader:
     return StreamingLoader(ShardDataset(data_dir), workers=workers,
-                           prefetch=prefetch)
+                           prefetch=prefetch, columns=columns)
 
 
 def run(n_shards: int = N_SHARDS, rows: int = ROWS) -> List[Dict]:
@@ -91,19 +95,42 @@ def _run(root: str, n_shards: int, rows: int) -> List[Dict]:
                        f"consumer_stall={s.consumer_stall_seconds:.2f}s",
         })
 
-    # --------------------------- 4. pipelined vs staged with disk in loop
-    layers = compile_layers(build_schedule(build_fe_graph()))
+    # -------------------------------------- 4. loader projection pushdown
+    baseline = _loader(data_dir, 1)
+    for _ in baseline:
+        pass
+    for spec_name in list_specs():
+        plan = featureplan.compile(get_spec(spec_name))
+        loader = StreamingLoader(ShardDataset(data_dir), workers=1,
+                                 prefetch=4, columns=plan.required_columns)
+        for _ in loader:
+            pass
+        s, b = loader.stats, baseline.stats
+        out.append({
+            "name": f"ingest_projection_{spec_name}",
+            "us_per_call": 0.0,
+            "derived": f"cols {b.columns_decoded}->{s.columns_decoded} "
+                       f"({s.columns_decoded/b.columns_decoded*100:.0f}%); "
+                       f"decoded {b.bytes_decoded/2**20:.1f}->"
+                       f"{s.bytes_decoded/2**20:.1f}MiB "
+                       f"({s.bytes_decoded/b.bytes_decoded*100:.0f}%)",
+        })
+
+    # --------------------------- 5. pipelined vs staged with disk in loop
+    plan = _ads_plan()
+    layers = plan.layers
     step, opt = _make_train_step()
-    params = _model(jax.random.PRNGKey(0))
+    params = _model(jax.random.PRNGKey(0), plan.layout)
     state = {"p": params, "s": opt.init(params)}
 
     # warmup run traces/compiles the FE layers + train step
+    cols = plan.required_columns
     PipelinedRunner(layers, step, prefetch=2).run(
-        dict(state), _loader(data_dir, 2))
+        dict(state), _loader(data_dir, 2, columns=cols))
 
     pipe = PipelinedRunner(layers, step, prefetch=2)
     t0 = time.perf_counter()
-    pipe.run(dict(state), _loader(data_dir, 2))
+    pipe.run(dict(state), _loader(data_dir, 2, columns=cols))
     t_pipe = time.perf_counter() - t0
     ing = pipe.stats.ingest
     out.append({

@@ -18,15 +18,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (
-    ExecutionStats,
-    build_schedule,
-    compile_layers,
-    run_layers,
-    run_unfused,
-)
+from repro.core import ExecutionStats, run_layers, run_unfused
+from repro.fe import featureplan, get_spec
 from repro.fe.datagen import gen_views
-from repro.fe.pipeline_graph import build_fe_graph
 
 
 def empty_kernel_sweep() -> List[Dict]:
@@ -51,7 +45,7 @@ def empty_kernel_sweep() -> List[Dict]:
 
 
 def fe_fused_vs_unfused(n_iters: int = 20) -> List[Dict]:
-    layers = compile_layers(build_schedule(build_fe_graph()))
+    layers = featureplan.compile(get_spec("ads_ctr")).layers
     views = gen_views(4096, seed=0)
 
     # warm both paths

@@ -4,6 +4,9 @@ Prints ``name,us_per_call,derived`` CSV (one row per measurement).
 
   PYTHONPATH=src python -m benchmarks.run             # all
   PYTHONPATH=src python -m benchmarks.run --only e2e  # substring filter
+  PYTHONPATH=src python -m benchmarks.run --list      # suite names only
+
+Exits nonzero if any selected suite fails, so CI can gate on the run.
 """
 
 from __future__ import annotations
@@ -16,6 +19,8 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="", help="substring filter on suite name")
+    ap.add_argument("--list", action="store_true",
+                    help="print suite names and exit (no benchmarks run)")
     args = ap.parse_args()
 
     from benchmarks import bench_end_to_end, bench_feature_extraction, \
@@ -29,8 +34,12 @@ def main() -> None:
         ("hierarchy(PS tiers)", bench_hierarchy.run),
         ("roofline", roofline.run),
     ]
+    if args.list:
+        for name, _ in suites:
+            print(name)
+        return
     print("name,us_per_call,derived")
-    failed = 0
+    failed = []
     for name, fn in suites:
         if args.only and args.only not in name:
             continue
@@ -39,10 +48,11 @@ def main() -> None:
                 derived = str(row.get("derived", "")).replace(",", ";")
                 print(f"{row['name']},{row['us_per_call']:.2f},{derived}")
         except Exception:
-            failed += 1
+            failed.append(name)
             traceback.print_exc()
             print(f"{name},NaN,SUITE FAILED")
     if failed:
+        print(f"FAILED suites: {', '.join(failed)}", file=sys.stderr)
         sys.exit(1)
 
 

@@ -1,47 +1,44 @@
-"""Quickstart: the FeatureBox pipeline in ~60 lines.
+"""Quickstart: declarative features -> compiled plan -> training, in ~60 lines.
 
-Generates raw ads views, builds the FE operator graph, schedules it into
-layers (host/device placement + per-layer meta-kernels), runs one batch
-through the pipeline, and trains a tiny CTR model on the output.
+Generates raw ads views, compiles the bundled ``ads_ctr`` FeatureSpec into a
+FeaturePlan (operator graph -> layered schedule -> fused meta-kernels), runs
+one batch through the plan, and trains a tiny CTR model on the output.
+
+Swap the spec name for ``dlrm`` or ``bst`` (or write your own FeatureSpec —
+see README "Defining features") to change the whole feature pipeline in one
+line.
 
   PYTHONPATH=src python examples/quickstart.py
 """
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import build_schedule, compile_layers, run_layers
+from repro.fe import featureplan, get_spec
 from repro.fe.datagen import gen_views
-from repro.fe.pipeline_graph import N_DENSE_FEATS, N_SPARSE_FIELDS, build_fe_graph
 from repro.models.common import sigmoid_bce
 from repro.train.optimizer import adamw
 
 # 1. raw logs: three views + materialized basic features ------------------
 views = gen_views(n_instances=2048, seed=0)
 
-# 2. the FE operator graph, scheduled layer-wise ---------------------------
-graph = build_fe_graph()
-schedule = build_schedule(graph)
-print(f"schedule: {schedule.n_layers} layers, "
-      f"{schedule.n_device_dispatches} fused device dispatches "
-      f"(vs {schedule.n_unfused_dispatches} unfused)")
-layers = compile_layers(schedule)
+# 2. declarative feature definitions, compiled into a plan -----------------
+plan = featureplan.compile(get_spec("ads_ctr"))
+print(plan.summary())
+print("columns read:", {v: len(c) for v, c in plan.required_columns.items()})
 
 # 3. run the pipeline: views -> training batch -----------------------------
-env = run_layers(layers, dict(views))
-batch = {k: env[k] for k in
-         ("batch_dense", "batch_sparse", "batch_seq_ids", "batch_seq_mask",
-          "batch_label")}
+batch = plan.outputs(plan.run(views))
 print("batch:", {k: tuple(v.shape) for k, v in batch.items()})
 
 # 4. a tiny CTR model over the extracted features --------------------------
-FIELD = 1 << 20
+lay = plan.layout
 key = jax.random.PRNGKey(0)
 params = {
     "embed": jax.random.normal(key, (64 * 1024, 16)) * 0.05,  # hashed-down table
     "w1": jax.random.normal(jax.random.fold_in(key, 1),
-                            (N_DENSE_FEATS + N_SPARSE_FIELDS * 16 + 16, 64)) * 0.05,
+                            (lay.n_dense_feats + lay.n_sparse_fields * 16 + 16,
+                             64)) * 0.05,
     "b1": jnp.zeros(64),
     "w2": jax.random.normal(jax.random.fold_in(key, 2), (64, 1)) * 0.05,
     "b2": jnp.zeros(1),

@@ -15,9 +15,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import ExecutionStats, build_schedule, compile_layers, run_layers
+from repro.core import ExecutionStats
+from repro.fe import featureplan, get_spec
 from repro.fe.datagen import gen_views
-from repro.fe.pipeline_graph import N_DENSE_FEATS, N_SPARSE_FIELDS, build_fe_graph
 from repro.train.optimizer import adamw
 from repro.models.common import sigmoid_bce
 
@@ -25,8 +25,8 @@ TABLE = 64 * 1024
 DIM = 16
 
 
-def make_model(key):
-    d_in = N_DENSE_FEATS + N_SPARSE_FIELDS * DIM + DIM
+def make_model(key, layout):
+    d_in = layout.n_dense_feats + layout.n_sparse_fields * DIM + DIM
     return {
         "embed": jax.random.normal(key, (TABLE, DIM)) * 0.05,
         "w1": jax.random.normal(jax.random.fold_in(key, 1), (d_in, 64)) * 0.05,
@@ -52,16 +52,15 @@ def main():
     ap.add_argument("--batch", type=int, default=256)
     args = ap.parse_args()
 
-    layers = compile_layers(build_schedule(build_fe_graph()))
+    plan = featureplan.compile(get_spec("ads_ctr"))
     key = jax.random.PRNGKey(0)
-    params = make_model(key)
+    params = make_model(key, plan.layout)
 
     # brief training so scores are meaningful
     opt = adamw(1e-2)
     st = opt.init(params)
     train_views = gen_views(1024, seed=1)
-    env = run_layers(layers, dict(train_views))
-    env = {k: v for k, v in env.items() if k.startswith("batch_")}
+    env = plan.outputs(plan.run(train_views))
 
     @jax.jit
     def step(p, s):
@@ -80,8 +79,7 @@ def main():
     for i in range(n_batches):
         reqs = gen_views(args.batch, seed=100 + i)
         t0 = time.perf_counter()
-        env_i = run_layers(layers, dict(reqs), stats=stats)
-        env_i = {k: v for k, v in env_i.items() if k.startswith("batch_")}
+        env_i = plan.outputs(plan.run(reqs, stats=stats))
         s = score(params, env_i)
         s.block_until_ready()
         lat.append(time.perf_counter() - t0)

@@ -1,27 +1,27 @@
-"""Streaming-ingest demo: on-disk raw-log shards -> FE pipeline -> training.
+"""Streaming-ingest demo: on-disk raw-log shards -> FeaturePlan -> training.
 
-The minimal end-to-end tour of ``repro.io``:
+The minimal end-to-end tour of ``repro.io`` + the declarative FE front end:
 
 1. materialize the synthetic raw ads log as ``.fbshard`` files
    (``write_log_shards``) — the stand-in for the paper's 15-25 TB log store;
-2. stream them back with a multi-worker ``StreamingLoader`` (bounded queue,
-   backpressure, checksummed reads);
+2. compile a FeatureSpec preset into a ``FeaturePlan`` and stream the shards
+   back with a multi-worker ``StreamingLoader``, decoding only the plan's
+   ``required_columns`` (projection pushdown);
 3. feed the loader straight into ``PipelinedRunner`` so disk read + feature
    extraction for batch i+1 overlap training on batch i.
 
 Run:
-  PYTHONPATH=src python examples/stream_train.py [--shards 8] [--rows 1024]
+  PYTHONPATH=src python examples/stream_train.py [--spec ads_ctr|dlrm|bst]
 """
 
 import argparse
 import tempfile
 
-import jax
 import numpy as np
 
-from repro.core import PipelinedRunner, build_schedule, compile_layers
+from repro.core import PipelinedRunner
+from repro.fe import featureplan, get_spec, list_specs
 from repro.fe.datagen import write_log_shards
-from repro.fe.pipeline_graph import build_fe_graph
 from repro.io.dataset import ShardDataset
 from repro.io.stream import StreamingLoader
 
@@ -31,6 +31,7 @@ def main():
     ap.add_argument("--shards", type=int, default=8)
     ap.add_argument("--rows", type=int, default=1024)
     ap.add_argument("--workers", type=int, default=2)
+    ap.add_argument("--spec", default="ads_ctr", choices=list_specs())
     ap.add_argument("--data-dir", default=None)
     args = ap.parse_args()
     data_dir = args.data_dir or tempfile.mkdtemp(prefix="adslog_")
@@ -42,17 +43,22 @@ def main():
     print(f"   {len(paths)} shards, {ds.total_bytes/2**20:.1f} MiB, "
           f"{ds.total_rows} instances")
 
-    print("== streaming through the FeatureBox FE pipeline into training")
-    layers = compile_layers(build_schedule(build_fe_graph()))
+    print(f"== compiling the {args.spec!r} feature spec")
+    plan = featureplan.compile(get_spec(args.spec))
+    print(f"   {plan.summary()}")
+    print(f"   projection: {({v: len(c) for v, c in plan.required_columns.items()})}")
+
+    print("== streaming through the compiled plan into training")
 
     def train_step(state, env):
         # checksum "training" keeps the demo free of model boilerplate;
         # see launch/train.py --data-dir for the real model path
-        s = float(np.asarray(env["batch_dense"]).sum())
+        s = float(np.asarray(env["batch_sparse"]).sum())
         return {"sum": state["sum"] + s, "batches": state["batches"] + 1}
 
-    loader = StreamingLoader(ds, workers=args.workers, prefetch=4)
-    runner = PipelinedRunner(layers, train_step, prefetch=2)
+    loader = StreamingLoader(ds, workers=args.workers, prefetch=4,
+                             columns=plan.required_columns)
+    runner = PipelinedRunner(plan.layers, train_step, prefetch=2)
     state = runner.run({"sum": 0.0, "batches": 0}, loader)
 
     st = runner.stats

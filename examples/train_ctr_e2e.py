@@ -22,11 +22,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import build_schedule, compile_layers, run_layers
 from repro.embedding.hierarchy import HierarchicalPS
+from repro.fe import featureplan, get_spec
 from repro.fe.colstore import ColumnStore
 from repro.fe.datagen import gen_views, write_views
-from repro.fe.pipeline_graph import N_DENSE_FEATS, N_SPARSE_FIELDS, build_fe_graph
 from repro.models.common import sigmoid_bce
 from repro.train.checkpoint import CheckpointManager
 from repro.train.fault import ShardServer
@@ -34,11 +33,10 @@ from repro.train.optimizer import adamw
 
 EMBED_DIM = 64
 TABLE_ROWS = 1_600_000  # x64 dim = 102.4M embedding params ("10TB model" stand-in)
-SEQ_FIELDS = 48
 
 
-def build_model(key):
-    d_in = N_DENSE_FEATS + (N_SPARSE_FIELDS + 1) * EMBED_DIM
+def build_model(key, layout):
+    d_in = layout.n_dense_feats + (layout.n_sparse_fields + 1) * EMBED_DIM
     return {
         "w1": jax.random.normal(key, (d_in, 256)) * 0.03,
         "b1": jnp.zeros(256),
@@ -77,8 +75,8 @@ def main():
     n_chunks = len(store.chunks("impressions"))
 
     # ------------------------------------------------------------ pipeline
-    graph = build_fe_graph()
-    layers = compile_layers(build_schedule(graph))
+    plan = featureplan.compile(get_spec("ads_ctr"))
+    print(plan.summary())
     shard_server = ShardServer(n_shards=n_chunks, lease_timeout=60.0)
 
     # ------------------------------------------------- hierarchical PS tier
@@ -88,7 +86,7 @@ def main():
     accum = np.full(TABLE_ROWS, 0.1, np.float32)  # Adagrad per-row state
 
     key = jax.random.PRNGKey(0)
-    dense_params = build_model(key)
+    dense_params = build_model(key, plan.layout)
     opt = adamw(2e-3)
     opt_state = opt.init(dense_params)
     ckpt = CheckpointManager(os.path.join(workdir, "ckpt"), keep=2)
@@ -114,14 +112,13 @@ def main():
         if shard is None:
             shard_server = ShardServer(n_shards=n_chunks)  # next epoch
             continue
-        # read all four views for this shard (column store: only needed cols)
-        from repro.fe.datagen import AD_INVENTORY, BASIC_FEATURES, IMPRESSIONS, USER_PROFILE
+        # read this shard's views — projection pushdown: the column store
+        # only touches the columns the compiled plan actually reads
         env = {}
-        for vname, sch in (("impressions", IMPRESSIONS), ("user_profile", USER_PROFILE),
-                           ("ad_inventory", AD_INVENTORY), ("basic_features", BASIC_FEATURES)):
+        for vname, cols in plan.required_columns.items():
             cid = shard % max(1, len(store.chunks(vname)))
-            env[vname] = store.read_columns(vname, cid, [c.name for c in sch.columns])
-        env = run_layers(layers, env)
+            env[vname] = store.read_columns(vname, cid, list(cols))
+        env = plan.run(env)
 
         sp = np.asarray(env["batch_sparse"]) % TABLE_ROWS
         seq = np.asarray(env["batch_seq_ids"]) % TABLE_ROWS

@@ -1,13 +1,61 @@
-"""Feature-extraction substrate: column store, views, joins, FE ops, datagen."""
+"""Feature-extraction substrate: declarative specs + compiler, column store,
+views, joins, FE ops, datagen.
+
+Defining features is declarative: describe sources/transforms/outputs with
+:mod:`repro.fe.spec`, then ``featureplan.compile(spec)`` returns a
+:class:`~repro.fe.featureplan.FeaturePlan` bundling the lowered OpGraph,
+fixed schedule, fused layer executables, output layout, and the per-view
+column projection (``required_columns``) for the ingest tier.
+"""
 
 from repro.fe.colstore import ColumnStore, Columns, RaggedColumn
 from repro.fe.schema import ColType, Column, ViewSchema
+from repro.fe.spec import (
+    Bucketize,
+    Cross,
+    Custom,
+    DenseOutput,
+    FeatureSpec,
+    Hash,
+    Join,
+    JsonExtract,
+    LogNorm,
+    Merge,
+    Scale,
+    Sequence,
+    SequenceOutput,
+    Source,
+    SparseOutput,
+)
+from repro.fe.compiler import OutputLayout, SpecError
+from repro.fe.featureplan import FeaturePlan
+from repro.fe.specs import get_spec, list_specs
 
 __all__ = [
+    "Bucketize",
     "ColType",
     "Column",
     "ColumnStore",
     "Columns",
+    "Cross",
+    "Custom",
+    "DenseOutput",
+    "FeaturePlan",
+    "FeatureSpec",
+    "Hash",
+    "Join",
+    "JsonExtract",
+    "LogNorm",
+    "Merge",
+    "OutputLayout",
     "RaggedColumn",
+    "Scale",
+    "Sequence",
+    "SequenceOutput",
+    "Source",
+    "SparseOutput",
+    "SpecError",
     "ViewSchema",
+    "get_spec",
+    "list_specs",
 ]

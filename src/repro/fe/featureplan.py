@@ -1,0 +1,96 @@
+"""The one-call front door: FeatureSpec -> ready-to-run FeaturePlan.
+
+``compile(spec)`` bundles everything the ten call sites used to wire by
+hand — ``build_fe_graph() -> build_schedule() -> compile_layers()`` plus the
+output-layout constants — into a single object:
+
+    plan = featureplan.compile(get_spec("ads_ctr"))
+    env = plan.run(raw_views)                  # one batch through the FE
+    runner = PipelinedRunner(plan.layers, train_step)   # or the full loop
+    loader = StreamingLoader(ds, columns=plan.required_columns)  # pushdown
+
+``plan.required_columns`` is the per-view column projection derived from
+the spec, fed to ``StreamingLoader``/``ShardReader``/``ColumnStore`` so
+columns no transform touches are never decoded from disk.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Mapping, MutableMapping, Tuple
+
+from repro.core.metakernel import LayerExecutable, compile_layers, run_layers
+from repro.core.opgraph import OpGraph
+from repro.core.scheduler import (
+    DEFAULT_DEVICE_BYTES_BUDGET,
+    Schedule,
+    build_schedule,
+)
+from repro.fe import compiler
+from repro.fe.compiler import OutputLayout
+from repro.fe.spec import DEFAULT_FIELD_SIZE, FeatureSpec
+
+
+@dataclasses.dataclass
+class FeaturePlan:
+    """A compiled feature pipeline: graph + schedule + layers + layout."""
+
+    spec: FeatureSpec
+    graph: OpGraph
+    schedule: Schedule
+    layers: List[LayerExecutable]
+    layout: OutputLayout
+    required_columns: Dict[str, Tuple[str, ...]]
+    device_budget: int
+
+    @property
+    def name(self) -> str:
+        return self.spec.name
+
+    @property
+    def output_slots(self) -> Tuple[str, ...]:
+        """The ``batch_*`` slots this plan produces, in a stable order."""
+        final = self.graph.ops["final_batch"]
+        return tuple(sorted(final.outputs))
+
+    def run(self, batch: Mapping[str, Any], *, device=None,
+            stats=None) -> Dict[str, Any]:
+        """Run one raw batch ``{view: columns}`` through the compiled layers.
+
+        Returns the full slot environment (inputs, intermediates, and the
+        ``batch_*`` outputs); use :meth:`outputs` for just the batch dict.
+        """
+        env: MutableMapping[str, Any] = dict(batch)
+        run_layers(self.layers, env, device=device, stats=stats)
+        return dict(env)
+
+    def outputs(self, env: Mapping[str, Any]) -> Dict[str, Any]:
+        """Filter an environment down to this plan's ``batch_*`` outputs."""
+        return {k: env[k] for k in self.output_slots}
+
+    def summary(self) -> str:
+        s = self.schedule
+        lay = self.layout
+        return (f"plan {self.spec.name!r}: {s.n_layers} layers, "
+                f"{s.n_device_dispatches} fused device dispatches "
+                f"(vs {s.n_unfused_dispatches} unfused); "
+                f"outputs: {lay.n_sparse_fields} sparse fields x "
+                f"{lay.field_size} slots, {lay.n_dense_feats} dense, "
+                f"seq_len {lay.seq_len}")
+
+
+def compile(spec: FeatureSpec, *,
+            device_budget: int = DEFAULT_DEVICE_BYTES_BUDGET,
+            field_size: int = DEFAULT_FIELD_SIZE) -> FeaturePlan:
+    """Lower ``spec`` and build its fixed schedule + fused layer executables."""
+    graph = compiler.lower(spec, field_size=field_size)
+    schedule = build_schedule(graph, device_bytes_budget=device_budget)
+    return FeaturePlan(
+        spec=spec,
+        graph=graph,
+        schedule=schedule,
+        layers=compile_layers(schedule),
+        layout=compiler.output_layout(spec, field_size=field_size),
+        required_columns=compiler.required_columns(spec),
+        device_budget=device_budget,
+    )

@@ -1,7 +1,19 @@
 """The standard ads FE pipeline as an operator graph (paper Fig. 3).
 
-Wires read -> clean -> join -> extract -> merge over the synthetic views into
-an :class:`~repro.core.opgraph.OpGraph`, with placements matching the paper:
+DEPRECATED surface: the pipeline is now *defined* declaratively in
+``repro.fe.specs.ads_ctr`` and lowered by ``repro.fe.compiler``;
+:func:`build_fe_graph` is kept as a thin compat wrapper that compiles that
+spec. Prefer the one-call front door::
+
+    from repro.fe import featureplan
+    from repro.fe.specs import get_spec
+    plan = featureplan.compile(get_spec("ads_ctr"))
+
+:func:`build_fe_graph_legacy` is the original hand-wired builder, retained
+so ``tests/test_spec.py`` can assert the compiled spec is
+schedule-equivalent (same layers, placements, outputs).
+
+Placements match the paper either way:
 
 * clean / json-extract / tokenize / join — HOST (string + dictionary work),
 * hash-cross / bucketize / lognorm / sparse-id mapping — DEVICE, fused into
@@ -34,20 +46,25 @@ DENSE_DIM = 6        # dense features after extraction
 
 
 def build_fe_graph(*, field_size: int = FIELD_SIZE) -> OpGraph:
+    """Compat wrapper: compile the declarative ``ads_ctr`` spec."""
+    from repro.fe import compiler
+    from repro.fe.specs import ads_ctr
+
+    return compiler.lower(ads_ctr.build_spec(), field_size=field_size)
+
+
+def build_fe_graph_legacy(*, field_size: int = FIELD_SIZE) -> OpGraph:
+    """The original hand-wired graph (reference for equivalence tests)."""
     g = OpGraph()
     g.mark_external("impressions", "user_profile", "ad_inventory", "basic_features")
 
     # ---------------------------------------------------------- clean (HOST)
     def clean_impressions(impressions: Columns) -> Dict[str, Columns]:
-        cols = extract_json_fields(
-            impressions, "context_json",
-            {"slot": ColType.INT, "device": ColType.INT, "geo": ColType.INT},
-        )
-        cols = fill_nulls(cols, IMPRESSIONS)
-        # extracted JSON fields need their own null fill
-        for f in ("slot", "device", "geo"):
-            cols[f] = np.where(cols[f] == np.iinfo(np.int64).min, 0, cols[f])
-        return {"imp_clean": cols}
+        ctx_fields = {"slot": ColType.INT, "device": ColType.INT,
+                      "geo": ColType.INT}
+        cols = extract_json_fields(impressions, "context_json", ctx_fields)
+        return {"imp_clean": fill_nulls(cols, IMPRESSIONS,
+                                        extracted=ctx_fields)}
 
     g.add(Operator("clean_impressions", clean_impressions,
                    ("impressions",), ("imp_clean",), device=Device.HOST))

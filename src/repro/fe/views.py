@@ -24,10 +24,27 @@ _NULL_INT = np.iinfo(np.int64).min
 _NULL_FLOAT = np.nan
 
 
-def fill_nulls(columns: Columns, schema: ViewSchema) -> Columns:
-    """Replace null sentinels with each column's fill value."""
+def fill_nulls(
+    columns: Columns,
+    schema: ViewSchema,
+    *,
+    extracted: Optional[Mapping[str, ColType]] = None,
+) -> Columns:
+    """Replace null sentinels with each column's fill value.
+
+    ``extracted`` names columns that are not part of ``schema`` (typically
+    produced by :func:`extract_json_fields`) but should be null-filled with
+    their type's default as well, so callers never hand-roll a second
+    sentinel pass.
+    """
+    extra_cols = tuple(Column(name, ctype) for name, ctype in (extracted or {}).items())
+    for col in extra_cols:
+        if col.name in {c.name for c in schema.columns}:
+            raise ValueError(
+                f"extracted column {col.name!r} shadows a schema column of "
+                f"view {schema.name!r}")
     out: Columns = {}
-    for col in schema.columns:
+    for col in schema.columns + extra_cols:
         if col.name not in columns:
             continue
         data = columns[col.name]

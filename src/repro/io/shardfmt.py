@@ -192,6 +192,10 @@ class ShardReader:
         self.path = path
         self.verify = verify
         self.nbytes = os.path.getsize(path)
+        # Decode accounting (projection pushdown observability): payload
+        # bytes and column count actually decoded by this reader.
+        self.bytes_decoded = 0
+        self.columns_decoded = 0
         if self.nbytes < _HEADER_LEN + _TRAILER_LEN:
             raise ShardFormatError(f"{path}: truncated ({self.nbytes} bytes)")
         with open(path, "rb") as f:
@@ -245,12 +249,23 @@ class ShardReader:
         with open(self.path, "rb") as f:
             return self._read_table(f, table, columns)
 
-    def read_all(self) -> Dict[str, Columns]:
-        """Decode every table — the env shape the FE runners consume.
+    def read_all(
+        self,
+        columns: Optional[Mapping[str, Sequence[str]]] = None,
+    ) -> Dict[str, Columns]:
+        """Decode tables — the env shape the FE runners consume.
+
+        ``columns`` is an optional projection ``{table: [column, ...]}``
+        (e.g. a ``FeaturePlan.required_columns``): only the listed tables
+        and columns are decoded; everything else stays as undecoded bytes
+        on disk. ``None`` decodes every table in full.
 
         One file handle for the whole shard (hot reader-thread path)."""
         with open(self.path, "rb") as f:
-            return {t: self._read_table(f, t, None) for t in self._tables}
+            if columns is None:
+                return {t: self._read_table(f, t, None) for t in self._tables}
+            return {t: self._read_table(f, t, cols)
+                    for t, cols in columns.items()}
 
     def _read_table(self, f, table: str,
                     columns: Optional[Sequence[str]]) -> Columns:
@@ -263,6 +278,8 @@ class ShardReader:
                 raise KeyError(
                     f"{self.path}: table {table!r} has no column {name!r}")
             out[name] = self._read_column(f, cmeta)
+            self.columns_decoded += 1
+            self.bytes_decoded += sum(p["nbytes"] for p in cmeta["parts"])
         return out
 
     def _read_column(self, f, cmeta: Mapping[str, Any]) -> object:

@@ -44,6 +44,10 @@ class _ReaderError:
 class IngestStats:
     shards: int = 0
     bytes_read: int = 0
+    # Projection pushdown accounting: payload bytes / columns actually
+    # decoded (== bytes_read's payload when no column projection is set).
+    bytes_decoded: int = 0
+    columns_decoded: int = 0
     read_seconds: float = 0.0
     reader_stall_seconds: float = 0.0
     consumer_stall_seconds: float = 0.0
@@ -62,6 +66,8 @@ class IngestStats:
 
     def summary(self) -> str:
         return (f"shards={self.shards} bytes={self.bytes_read/2**20:.1f}MiB "
+                f"decoded={self.bytes_decoded/2**20:.1f}MiB "
+                f"({self.columns_decoded} cols) "
                 f"read={self.read_seconds:.2f}s "
                 f"({self.read_bytes_per_second/2**20:.0f}MiB/s) "
                 f"wall={self.wall_seconds:.2f}s "
@@ -90,6 +96,12 @@ class StreamingLoader:
     transform:
         Optional ``fn(env, info) -> env`` applied in the reader thread, so
         per-shard host work (filtering, re-batching) overlaps the consumer.
+    columns:
+        Optional projection ``{table: [column, ...]}`` — typically a
+        ``FeaturePlan.required_columns`` — pushed down into
+        :meth:`ShardReader.read_all` so untouched tables/columns are never
+        decoded from disk. ``IngestStats.bytes_decoded`` /
+        ``columns_decoded`` make the saving observable.
     verify:
         Verify payload checksums while decoding (default on).
     """
@@ -99,6 +111,7 @@ class StreamingLoader:
                  shuffle: bool = False, seed: int = 0,
                  transform: Optional[Callable[[Dict[str, Any], ShardInfo],
                                               Dict[str, Any]]] = None,
+                 columns: Optional[Mapping[str, Sequence[str]]] = None,
                  verify: bool = True):
         if workers < 1:
             raise ValueError(f"workers must be >= 1, got {workers}")
@@ -113,6 +126,8 @@ class StreamingLoader:
         self.shuffle = shuffle
         self.seed = seed
         self.transform = transform
+        self.columns = (None if columns is None
+                        else {t: tuple(c) for t, c in columns.items()})
         self.verify = verify
         self.stats = IngestStats()
         self._lock = threading.Lock()
@@ -149,13 +164,15 @@ class StreamingLoader:
                     break
                 t0 = time.perf_counter()
                 reader = ShardReader(info.path, verify=self.verify)
-                env = reader.read_all()
+                env = reader.read_all(self.columns)
                 if self.transform is not None:
                     env = self.transform(env, info)
                 dt = time.perf_counter() - t0
                 with self._lock:
                     self.stats.shards += 1
                     self.stats.bytes_read += reader.nbytes
+                    self.stats.bytes_decoded += reader.bytes_decoded
+                    self.stats.columns_decoded += reader.columns_decoded
                     self.stats.read_seconds += dt
                 self._put(out, env)
         except BaseException as e:  # propagate to the consumer

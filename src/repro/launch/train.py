@@ -10,16 +10,18 @@ Two batch sources:
 
 * default — in-memory ``synthetic_batch`` per step (no disk in the loop);
 * ``--data-dir DIR`` (recsys only) — stream ``.fbshard`` raw-log shards
-  through the FeatureBox FE schedule with ``repro.io.StreamingLoader``:
-  reader threads pull shards off disk, the FE worker extracts features for
-  batch i+1 while the device trains on batch i. Regenerate shards with
-  ``repro.fe.datagen.write_log_shards`` (see ``--gen-shards``).
+  through a compiled FeatureBox ``FeaturePlan`` with
+  ``repro.io.StreamingLoader``: reader threads pull shards off disk
+  (decoding only the plan's ``required_columns``), the FE worker extracts
+  features for batch i+1 while the device trains on batch i. Pick the
+  feature scenario with ``--spec ads_ctr|dlrm|bst``; regenerate shards
+  with ``repro.fe.datagen.write_log_shards`` (see ``--gen-shards``).
 
 Examples:
   PYTHONPATH=src python -m repro.launch.train --arch dlrm-mlperf --steps 50
   PYTHONPATH=src python -m repro.launch.train --arch yi-9b --steps 10
   PYTHONPATH=src python -m repro.launch.train --arch dlrm-mlperf \
-      --data-dir /tmp/adslog --gen-shards 8 --steps 16
+      --data-dir /tmp/adslog --gen-shards 8 --steps 16 --spec dlrm
 """
 
 from __future__ import annotations
@@ -67,11 +69,13 @@ def synthetic_batch(family: str, cfg, batch: int, step: int) -> Dict[str, Any]:
 def fe_env_to_model_batch(env: Dict[str, Any], cfg) -> Dict[str, Any]:
     """Adapt FE-pipeline outputs to a recsys model batch.
 
-    The FE graph emits a fixed layout (9 dense feats, 8 global sparse
-    fields, 48 seq positions); the arch config may want a different width,
-    so columns are tiled / re-hashed into the config's field vocabularies.
+    A compiled ``FeaturePlan`` emits a spec-dependent layout (e.g. ads_ctr:
+    9 dense feats, 8 sparse fields, 48 seq positions); the arch config may
+    want a different width, so columns are tiled / re-hashed into the
+    config's field vocabularies. Specs without a dense block (bst) or
+    sequence block (dlrm-as-plain) degrade gracefully: missing blocks are
+    synthesized from the sparse fields.
     """
-    dense = np.asarray(env["batch_dense"], np.float32)
     sparse = np.asarray(env["batch_sparse"], np.int64)
     fields = [sparse[:, i % sparse.shape[1]] % cfg.vocab_sizes[i]
               for i in range(cfg.n_sparse)]
@@ -80,11 +84,16 @@ def fe_env_to_model_batch(env: Dict[str, Any], cfg) -> Dict[str, Any]:
         "label": jnp.asarray(np.asarray(env["batch_label"], np.float32)),
     }
     if cfg.n_dense:
+        if "batch_dense" in env:
+            dense = np.asarray(env["batch_dense"], np.float32)
+        else:  # spec emits no dense block: log-scaled sparse ids stand in
+            dense = np.log1p(sparse.astype(np.float32))
         reps = -(-cfg.n_dense // dense.shape[1])  # ceil
         batch["dense"] = jnp.asarray(
             np.tile(dense, (1, reps))[:, :cfg.n_dense])
     if cfg.kind == "bst":
-        seq = np.asarray(env["batch_seq_ids"], np.int64)
+        seq = (np.asarray(env["batch_seq_ids"], np.int64)
+               if "batch_seq_ids" in env else sparse)
         reps = -(-cfg.seq_len // seq.shape[1])
         batch["seq"] = jnp.asarray(
             (np.tile(seq, (1, reps))[:, :cfg.seq_len]
@@ -94,15 +103,15 @@ def fe_env_to_model_batch(env: Dict[str, Any], cfg) -> Dict[str, Any]:
 
 def run_streaming(args, spec, cfg, train_step, state) -> None:
     """Stream raw-log shards from disk through FE into the train step."""
-    from repro.core import PipelinedRunner, build_schedule, compile_layers
-    from repro.fe.pipeline_graph import build_fe_graph
+    from repro.core import PipelinedRunner
+    from repro.fe import featureplan, get_spec
     from repro.io.dataset import ShardDataset
     from repro.io.stream import StreamingLoader
 
     if spec.family != "recsys":
         raise SystemExit(
-            f"--data-dir streaming runs the ads FE pipeline and is only "
-            f"wired for recsys archs (got family={spec.family!r})")
+            f"--data-dir streaming runs the FeatureBox FE pipeline and is "
+            f"only wired for recsys archs (got family={spec.family!r})")
 
     if args.gen_shards:
         from repro.fe.datagen import write_log_shards
@@ -117,11 +126,14 @@ def run_streaming(args, spec, cfg, train_step, state) -> None:
             f"host {args.host_id}/{args.n_hosts} got no shards: the dataset "
             f"has only {len(ds.shards)} shard(s); generate more or use "
             f"fewer hosts")
+    plan = featureplan.compile(get_spec(args.spec))
+    print(plan.summary())
     epochs = -(-args.steps // len(ds))  # enough passes for --steps
+    # Projection pushdown: only the columns the spec touches are decoded.
     loader = StreamingLoader(ds, workers=args.stream_workers,
                              prefetch=args.stream_prefetch, epochs=epochs,
-                             shuffle=True, seed=0)
-    layers = compile_layers(build_schedule(build_fe_graph()))
+                             shuffle=True, seed=0,
+                             columns=plan.required_columns)
     ckpt = (CheckpointManager(args.checkpoint_dir)
             if args.checkpoint_dir else None)
 
@@ -136,7 +148,7 @@ def run_streaming(args, spec, cfg, train_step, state) -> None:
             ckpt.save_async(len(losses) - 1, state)
         return state
 
-    runner = PipelinedRunner(layers, step_fn, prefetch=args.stream_prefetch)
+    runner = PipelinedRunner(plan.layers, step_fn, prefetch=args.stream_prefetch)
     shard_iter = iter(loader)  # kept so the generator can be closed below
     t0 = time.perf_counter()
     try:
@@ -158,7 +170,7 @@ def run_streaming(args, spec, cfg, train_step, state) -> None:
     s = runner.stats
     if not losses:
         raise SystemExit("streaming run consumed no batches")
-    print(f"arch={args.arch} mode=streaming steps={s.batches} "
+    print(f"arch={args.arch} spec={args.spec} mode=streaming steps={s.batches} "
           f"loss {losses[0]:.4f} -> {losses[-1]:.4f} "
           f"({dt:.1f}s, {dt/max(s.batches,1)*1e3:.1f} ms/step; "
           f"fe={s.fe_seconds:.2f}s train={s.train_seconds:.2f}s "
@@ -178,6 +190,10 @@ def main() -> None:
     ap.add_argument("--data-dir", default=None,
                     help="stream .fbshard raw-log shards instead of "
                          "in-memory synthetic batches (recsys only)")
+    from repro.fe.specs import list_specs
+    ap.add_argument("--spec", default="ads_ctr", choices=list_specs(),
+                    help="feature spec compiled for --data-dir streaming "
+                         "(declarative FE scenario preset)")
     ap.add_argument("--gen-shards", type=int, default=0,
                     help="generate this many shards into --data-dir first")
     ap.add_argument("--stream-workers", type=int, default=2)

@@ -62,10 +62,21 @@ def test_fill_nulls_and_json():
         "context_json": np.asarray(['{"slot": 3}', "not json"], object),
     }
     cols = extract_json_fields(cols, "context_json", {"slot": ColType.INT})
-    cols = fill_nulls(cols, IMPRESSIONS)
-    assert cols["hour"][1] == 0
-    assert cols["dwell_time"][1] == 0.0
-    assert cols["slot"][0] == 3 and cols["slot"][1] == null_i  # filled downstream
+    plain = fill_nulls(cols, IMPRESSIONS)
+    assert plain["hour"][1] == 0
+    assert plain["dwell_time"][1] == 0.0
+    # without `extracted`, non-schema columns keep their sentinel
+    assert plain["slot"][0] == 3 and plain["slot"][1] == null_i
+    # with `extracted`, JSON-derived columns are filled in the same pass —
+    # no caller needs a hand-rolled second sentinel sweep
+    filled = fill_nulls(cols, IMPRESSIONS, extracted={"slot": ColType.INT})
+    assert filled["slot"][0] == 3 and filled["slot"][1] == 0
+
+
+def test_fill_nulls_extracted_shadow_rejected():
+    cols = {"hour": np.asarray([1, 2], np.int64)}
+    with pytest.raises(ValueError, match="shadows"):
+        fill_nulls(cols, IMPRESSIONS, extracted={"hour": ColType.INT})
 
 
 def test_filter_rows_ragged():

@@ -314,3 +314,55 @@ def test_runners_consume_loader_and_capture_ingest_stats(tmp_path):
     assert pipe.stats.ingest.bytes_read > 0
     assert pipe.stats.intermediate_bytes == 0
     assert staged.stats.intermediate_bytes > 10_000
+
+
+# ------------------------------------------------------ projection pushdown
+def test_read_all_projection_skips_tables_and_columns(tmp_path):
+    views = gen_views(64, seed=5)
+    path = write_shard(str(tmp_path / "p.fbshard"), views)
+
+    full_reader = ShardReader(path)
+    full = full_reader.read_all()
+    assert full_reader.columns_decoded == sum(
+        len(cols) for cols in full.values())
+    assert full_reader.bytes_decoded > 0
+
+    proj = {"impressions": ("user_id", "label"),
+            "user_profile": ("interests",)}
+    proj_reader = ShardReader(path)
+    env = proj_reader.read_all(proj)
+    assert set(env) == {"impressions", "user_profile"}
+    assert set(env["impressions"]) == {"user_id", "label"}
+    np.testing.assert_array_equal(env["impressions"]["user_id"],
+                                  full["impressions"]["user_id"])
+    np.testing.assert_array_equal(env["user_profile"]["interests"].values,
+                                  full["user_profile"]["interests"].values)
+    assert proj_reader.columns_decoded == 3
+    assert proj_reader.bytes_decoded < full_reader.bytes_decoded
+
+
+def test_read_all_projection_unknown_column_raises(tmp_path):
+    path = write_shard(str(tmp_path / "p.fbshard"), gen_views(8, seed=0))
+    with pytest.raises(KeyError, match="typo"):
+        ShardReader(path).read_all({"impressions": ("typo",)})
+
+
+def test_streaming_loader_projection_reduces_decode(tmp_path):
+    write_log_shards(str(tmp_path), n_shards=3, rows_per_shard=128, seed=1)
+    ds = ShardDataset(str(tmp_path))
+
+    full = StreamingLoader(ds, workers=1)
+    n_full = sum(1 for _ in full)
+
+    from repro.fe import featureplan, get_spec
+    plan = featureplan.compile(get_spec("bst"))
+    proj = StreamingLoader(ds, workers=1, columns=plan.required_columns)
+    envs = list(proj)
+
+    assert n_full == len(envs) == 3
+    assert proj.stats.columns_decoded < full.stats.columns_decoded
+    assert proj.stats.bytes_decoded < full.stats.bytes_decoded
+    assert full.stats.bytes_decoded > 0
+    # projected envs still run through the compiled plan
+    out = plan.outputs(plan.run(envs[0]))
+    assert np.asarray(out["batch_sparse"]).shape[1] == 4

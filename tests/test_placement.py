@@ -1,0 +1,86 @@
+"""Scheduler placement heuristic: AUTO ops straddling the device budget,
+explicit HOST/DEVICE pins (paper §IV placement rule).
+
+Kept hypothesis-free so it runs even where the property-test extras are
+not installed (unlike test_scheduler.py).
+"""
+
+from repro.core import Device, OpCost, Operator, OpGraph, build_schedule
+from repro.core.scheduler import assign_device
+
+
+def _auto_op(name, bytes_touched):
+    return Operator(name, lambda x: {f"{name}_out": x}, ("x",),
+                    (f"{name}_out",), device=Device.AUTO,
+                    cost=OpCost(bytes_touched=bytes_touched))
+
+
+def test_auto_placement_budget_boundaries():
+    """The paper's heuristic: DEVICE unless the footprint exceeds budget."""
+    budget = 1 << 20
+    # exactly at budget: still fits on the device (strict > comparison)
+    assert assign_device(_auto_op("at", budget), budget) is Device.DEVICE
+    assert assign_device(_auto_op("under", budget - 1), budget) is Device.DEVICE
+    # one byte over: falls back to host
+    assert assign_device(_auto_op("over", budget + 1), budget) is Device.HOST
+    assert assign_device(_auto_op("zero", 0), budget) is Device.DEVICE
+
+
+def test_explicit_pins_override_cost():
+    """HOST/DEVICE pins are respected regardless of the cost estimate."""
+    budget = 1 << 20
+    huge_device = Operator("hd", lambda x: {"hd_out": x}, ("x",), ("hd_out",),
+                           device=Device.DEVICE,
+                           cost=OpCost(bytes_touched=1 << 50))
+    tiny_host = Operator("th", lambda x: {"th_out": x}, ("x",), ("th_out",),
+                         device=Device.HOST, cost=OpCost(bytes_touched=0))
+    assert assign_device(huge_device, budget) is Device.DEVICE
+    assert assign_device(tiny_host, budget) is Device.HOST
+
+
+def test_schedule_respects_budget_across_graph():
+    """End to end: the same AUTO graph splits differently as budget moves."""
+    g = OpGraph()
+    g.mark_external("x")
+    g.add(_auto_op("small", 100))
+    g.add(_auto_op("medium", 10_000))
+    g.add(_auto_op("large", 1_000_000))
+
+    def places(budget):
+        sched = build_schedule(g, device_bytes_budget=budget)
+        return {p.op.name: p.device
+                for layer in sched.layers for p in layer.ops}
+
+    all_fit = places(1_000_000)
+    assert all(d is Device.DEVICE for d in all_fit.values())
+    mid = places(10_000)
+    assert mid["small"] is Device.DEVICE
+    assert mid["medium"] is Device.DEVICE   # exactly at budget
+    assert mid["large"] is Device.HOST
+    none_fit = places(99)
+    assert all(d is Device.HOST for d in none_fit.values())
+
+
+def test_featureplan_device_budget_reaches_scheduler():
+    """device_budget must flow through featureplan.compile into the
+    scheduler: an AUTO custom op's placement flips as the budget moves
+    across its cost (pinned ops would pass regardless and prove nothing)."""
+    from repro.fe import Custom, FeatureSpec, featureplan, get_spec
+
+    base = get_spec("bst")
+    auto = Custom("auto_op", lambda label_col: {"auto_out": label_col},
+                  ("label_col",), ("auto_out",), device=Device.AUTO,
+                  cost=OpCost(bytes_touched=1 << 20))
+    spec = FeatureSpec(
+        name="bst_auto", base=base.base, sources=base.sources,
+        outputs=base.outputs, joins=base.joins,
+        transforms=base.transforms + (auto,), label=base.label)
+
+    def place(budget):
+        plan = featureplan.compile(spec, device_budget=budget)
+        return {p.op.name: p.device
+                for layer in plan.schedule.layers
+                for p in layer.ops}["auto_op"]
+
+    assert place(1 << 20) is Device.DEVICE        # exactly at budget: fits
+    assert place((1 << 20) - 1) is Device.HOST    # over budget: host fallback

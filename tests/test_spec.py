@@ -1,0 +1,269 @@
+"""Declarative FeatureSpec API: compiler lowering, schedule equivalence with
+the legacy hand-wired graph, scenario presets, projection pushdown."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Device, OpCost, PipelinedRunner, build_schedule, run_layers
+from repro.fe import (
+    Custom,
+    DenseOutput,
+    FeatureSpec,
+    Hash,
+    Join,
+    SparseOutput,
+    Source,
+    featureplan,
+    get_spec,
+    list_specs,
+)
+from repro.fe.compiler import SpecError, required_columns
+from repro.fe.datagen import IMPRESSIONS, USER_PROFILE, gen_views
+from repro.fe.pipeline_graph import build_fe_graph, build_fe_graph_legacy
+
+BATCH_KEYS = ("batch_dense", "batch_sparse", "batch_seq_ids",
+              "batch_seq_mask", "batch_label")
+
+
+def _layer_shape(schedule):
+    return [(len(l.host_ops), len(l.device_ops)) for l in schedule.layers]
+
+
+# ------------------------------------------------- legacy-graph equivalence
+def test_ads_spec_schedule_equivalent_to_legacy():
+    """Acceptance: same layers, same placements as the hand-wired graph."""
+    s_new = build_schedule(build_fe_graph())
+    s_old = build_schedule(build_fe_graph_legacy())
+    assert s_new.n_layers == s_old.n_layers
+    assert _layer_shape(s_new) == _layer_shape(s_old)
+    assert s_new.n_device_dispatches == s_old.n_device_dispatches
+    assert s_new.n_unfused_dispatches == s_old.n_unfused_dispatches
+
+
+def test_ads_spec_outputs_equal_legacy_bitwise():
+    views = gen_views(256, seed=3)
+    plan = featureplan.compile(get_spec("ads_ctr"))
+    from repro.core import compile_layers
+    legacy_layers = compile_layers(build_schedule(build_fe_graph_legacy()))
+    a = plan.run(dict(views))
+    b = run_layers(legacy_layers, dict(views))
+    for k in BATCH_KEYS:
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]))
+
+
+def test_ads_layout_matches_legacy_constants():
+    from repro.fe.pipeline_graph import N_DENSE_FEATS, N_SPARSE_FIELDS, SEQ_LEN
+    lay = featureplan.compile(get_spec("ads_ctr")).layout
+    assert lay.n_sparse_fields == N_SPARSE_FIELDS
+    assert lay.n_dense_feats == N_DENSE_FEATS
+    assert lay.seq_len == 3 * SEQ_LEN
+    assert lay.sparse_id_space == N_SPARSE_FIELDS * lay.field_size
+
+
+# ------------------------------------------------------------ preset shapes
+def test_list_specs():
+    assert list_specs() == ["ads_ctr", "bst", "dlrm"]
+
+
+def test_dlrm_preset_matches_config_shape():
+    from repro.configs.dlrm_mlperf import CONFIG
+    plan = featureplan.compile(get_spec("dlrm"))
+    assert plan.layout.n_dense_feats == CONFIG.n_dense == 13
+    assert plan.layout.n_sparse_fields == CONFIG.n_sparse == 26
+    b = 64
+    out = plan.outputs(plan.run(gen_views(b, seed=7)))
+    assert np.asarray(out["batch_dense"]).shape == (b, 13)
+    assert np.asarray(out["batch_sparse"]).shape == (b, 26)
+    assert np.asarray(out["batch_seq_ids"]).shape == (b, 16)  # multi-hot bag
+    assert np.isfinite(np.asarray(out["batch_dense"])).all()
+    sparse = np.asarray(out["batch_sparse"])
+    fs = plan.layout.field_size
+    for f in range(26):  # field id spaces are disjoint
+        assert (sparse[:, f] // fs == f).all()
+
+
+def test_bst_preset_matches_config_shape():
+    from repro.configs.bst import CONFIG
+    plan = featureplan.compile(get_spec("bst"))
+    assert plan.layout.n_sparse_fields == CONFIG.n_sparse == 4
+    assert plan.layout.seq_len == CONFIG.seq_len == 20
+    assert plan.layout.n_dense_feats == CONFIG.n_dense == 0
+    b = 32
+    out = plan.outputs(plan.run(gen_views(b, seed=9)))
+    assert "batch_dense" not in out  # no dense block in the BST shape
+    assert np.asarray(out["batch_sparse"]).shape == (b, 4)
+    assert np.asarray(out["batch_seq_ids"]).shape == (b, 20)
+    assert np.asarray(out["batch_seq_mask"]).shape == (b, 20)
+
+
+@pytest.mark.parametrize("name", ["ads_ctr", "dlrm", "bst"])
+def test_pipelined_runner_green_on_all_presets(name):
+    """Acceptance: PipelinedRunner end-to-end on every bundled preset."""
+    plan = featureplan.compile(get_spec(name))
+    batches = [gen_views(64, seed=50 + i) for i in range(3)]
+
+    def step(state, env):
+        total = float(np.asarray(env["batch_sparse"]).sum())
+        return {"batches": state["batches"] + 1, "sum": state["sum"] + total}
+
+    runner = PipelinedRunner(plan.layers, step, prefetch=2)
+    state = runner.run({"batches": 0, "sum": 0.0}, batches)
+    assert state["batches"] == 3
+    assert np.isfinite(state["sum"])
+
+
+# ------------------------------------------------------ projection pushdown
+def test_required_columns_drop_untouched():
+    req = featureplan.compile(get_spec("ads_ctr")).required_columns
+    assert "gender" not in req["user_profile"]       # never referenced
+    assert "campaign_id" not in req["ad_inventory"]  # never referenced
+    assert "context_json" in req["impressions"]      # feeds JSON extraction
+    assert "interests" in req["user_profile"]
+
+    bst = featureplan.compile(get_spec("bst")).required_columns
+    assert "basic_features" not in bst               # whole table untouched
+    assert "query_text" not in bst["user_profile"]
+    assert set(bst["ad_inventory"]) == {"ad_id", "advertiser_id"}
+
+
+def test_projection_run_equals_full_run():
+    views = gen_views(128, seed=11)
+    plan = featureplan.compile(get_spec("ads_ctr"))
+    full = plan.run({v: dict(c) if isinstance(c, dict) else c
+                     for v, c in views.items()})
+    projected_views = {
+        v: {c: views[v][c] for c in cols}
+        for v, cols in plan.required_columns.items()
+    }
+    proj = plan.run(projected_views)
+    for k in BATCH_KEYS:
+        np.testing.assert_array_equal(np.asarray(full[k]), np.asarray(proj[k]))
+
+
+def test_custom_transform_disables_projection():
+    spec = get_spec("ads_ctr")
+    custom = Custom("extra", lambda label_col: {"extra": label_col},
+                    ("label_col",), ("extra",), device=Device.DEVICE)
+    spec = FeatureSpec(
+        name="ads_custom", base=spec.base, sources=spec.sources,
+        outputs=spec.outputs, joins=spec.joins, merges=spec.merges,
+        transforms=spec.transforms + (custom,), label=spec.label)
+    req = required_columns(spec)
+    # conservative fallback: every column of every source
+    assert set(req["user_profile"]) == set(USER_PROFILE.column_names)
+    assert set(req["impressions"]) == set(IMPRESSIONS.column_names)
+
+
+# ------------------------------------------------------- custom ops + errors
+def test_custom_op_runs_in_graph():
+    spec = get_spec("bst")
+    double = Custom("double_label",
+                    lambda label_col: {"label2": label_col * 2.0},
+                    ("label_col",), ("label2",), device=Device.DEVICE,
+                    cost=OpCost(flops=1))
+    spec = FeatureSpec(
+        name="bst_custom", base=spec.base, sources=spec.sources,
+        outputs=spec.outputs, joins=spec.joins,
+        transforms=spec.transforms + (double,), label=spec.label)
+    plan = featureplan.compile(spec)
+    env = plan.run(gen_views(16, seed=2))
+    np.testing.assert_allclose(np.asarray(env["label2"]),
+                               2.0 * np.asarray(env["batch_label"]))
+
+
+def test_unknown_column_reference_raises():
+    spec = FeatureSpec(
+        name="bad", base="impressions",
+        sources=(Source("impressions", IMPRESSIONS),),
+        transforms=(Hash("f", "nonexistent"),),
+        outputs=(SparseOutput(("f",)),))
+    with pytest.raises(SpecError, match="nonexistent"):
+        featureplan.compile(spec)
+
+
+def test_transform_input_type_mismatch_raises():
+    # Hash on a FLOAT column would silently truncate floats to sparse ids
+    spec = FeatureSpec(
+        name="badtype", base="impressions",
+        sources=(Source("impressions", IMPRESSIONS),),
+        transforms=(Hash("f", "dwell_time"),),
+        outputs=(SparseOutput(("f",)),))
+    with pytest.raises(SpecError, match="categorical INT"):
+        featureplan.compile(spec)
+    # Bucketize on a STRING column fails at compile time, not runtime
+    from repro.fe import Bucketize
+    spec2 = FeatureSpec(
+        name="badtype2", base="impressions",
+        sources=(Source("impressions", IMPRESSIONS),),
+        transforms=(Bucketize("d", "context_json", (1, 2)),),
+        outputs=(DenseOutput(("d",)),))
+    with pytest.raises(SpecError, match="numeric"):
+        featureplan.compile(spec2)
+
+
+def test_required_columns_json_extracted_join_key():
+    """A join key that only exists via JSON extraction must map to the JSON
+    source column in the projection, not to a phantom on-disk column."""
+    from repro.fe import JsonExtract
+    from repro.fe.schema import ColType, Column, ViewSchema
+
+    geo_dim = ViewSchema(
+        name="geo_dim", key="geo",
+        columns=(Column("geo", ColType.INT, nullable=False),
+                 Column("region", ColType.INT)))
+    spec = FeatureSpec(
+        name="geo_join", base="impressions",
+        sources=(
+            Source("impressions", IMPRESSIONS, json=(
+                JsonExtract("context_json", (("geo", ColType.INT),)),)),
+            Source("geo_dim", geo_dim),
+        ),
+        joins=(Join("geo_dim", key="geo", prefix="g_"),),
+        transforms=(Hash("f_region", "g_region"),),
+        outputs=(SparseOutput(("f_region",)),))
+    req = required_columns(spec)
+    assert "geo" not in req["impressions"]          # not an on-disk column
+    assert "context_json" in req["impressions"]     # its JSON source is
+    assert set(req["geo_dim"]) == {"geo", "region"}
+    # the projection actually feeds a run (regression: used to KeyError)
+    views = gen_views(64, seed=6)
+    rng = np.random.default_rng(0)
+    views["geo_dim"] = {
+        "geo": np.arange(512, dtype=np.int64),
+        "region": rng.integers(0, 8, 512).astype(np.int64)}
+    projected = {v: {c: views[v][c] for c in cols}
+                 for v, cols in req.items()}
+    plan = featureplan.compile(spec)
+    out = plan.outputs(plan.run(projected))
+    assert np.asarray(out["batch_sparse"]).shape == (64, 1)
+
+
+def test_wrong_output_kind_raises():
+    spec = FeatureSpec(
+        name="bad2", base="impressions",
+        sources=(Source("impressions", IMPRESSIONS),),
+        transforms=(Hash("f", "user_id"),),
+        outputs=(DenseOutput(("f",)),))  # Hash is not a dense transform
+    with pytest.raises(SpecError, match="dense"):
+        featureplan.compile(spec)
+
+
+def test_spec_validation_rejects_bad_refs():
+    with pytest.raises(ValueError, match="base view"):
+        FeatureSpec(name="x", base="missing",
+                    sources=(Source("impressions", IMPRESSIONS),),
+                    outputs=())
+    with pytest.raises(ValueError, match="unknown view"):
+        FeatureSpec(name="x", base="impressions",
+                    sources=(Source("impressions", IMPRESSIONS),),
+                    joins=(Join("nope", key="user_id"),),
+                    outputs=())
+
+
+def test_field_size_override():
+    plan = featureplan.compile(get_spec("bst"), field_size=1 << 10)
+    out = plan.outputs(plan.run(gen_views(64, seed=4)))
+    sparse = np.asarray(out["batch_sparse"])
+    assert (sparse >= 0).all() and (sparse < 4 * (1 << 10)).all()
+    assert plan.layout.field_size == 1 << 10
