@@ -23,14 +23,16 @@ def main() -> None:
                     help="print suite names and exit (no benchmarks run)")
     args = ap.parse_args()
 
-    from benchmarks import bench_end_to_end, bench_feature_extraction, \
-        bench_hierarchy, bench_ingest, bench_launch_overhead, roofline
+    from benchmarks import bench_devicefeed, bench_end_to_end, \
+        bench_feature_extraction, bench_hierarchy, bench_ingest, \
+        bench_launch_overhead, roofline
 
     suites = [
         ("launch_overhead(TableI)", bench_launch_overhead.run),
         ("feature_extraction(Fig6)", bench_feature_extraction.run),
         ("end_to_end(TableII)", bench_end_to_end.run),
         ("ingest(shard streaming)", bench_ingest.run),
+        ("devicefeed(H2D overlap)", bench_devicefeed.run),
         ("hierarchy(PS tiers)", bench_hierarchy.run),
         ("roofline", roofline.run),
     ]

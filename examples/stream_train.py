@@ -7,8 +7,11 @@ The minimal end-to-end tour of ``repro.io`` + the declarative FE front end:
 2. compile a FeatureSpec preset into a ``FeaturePlan`` and stream the shards
    back with a multi-worker ``StreamingLoader``, decoding only the plan's
    ``required_columns`` (projection pushdown);
-3. feed the loader straight into ``PipelinedRunner`` so disk read + feature
-   extraction for batch i+1 overlap training on batch i.
+3. feed the loader straight into ``PipelinedRunner`` with a ``DeviceFeeder``
+   third stage, so disk read + feature extraction for batch i+1 overlap
+   training on batch i and the H2D hop is staged through a buffer-ring
+   device arena off the training critical path (``--device-feed off``
+   reverts to the two-stage pipeline).
 
 Run:
   PYTHONPATH=src python examples/stream_train.py [--spec ads_ctr|dlrm|bst]
@@ -19,7 +22,7 @@ import tempfile
 
 import numpy as np
 
-from repro.core import PipelinedRunner
+from repro.core import DeviceFeeder, PipelinedRunner
 from repro.fe import featureplan, get_spec, list_specs
 from repro.fe.datagen import write_log_shards
 from repro.io.dataset import ShardDataset
@@ -32,6 +35,7 @@ def main():
     ap.add_argument("--rows", type=int, default=1024)
     ap.add_argument("--workers", type=int, default=2)
     ap.add_argument("--spec", default="ads_ctr", choices=list_specs())
+    ap.add_argument("--device-feed", default="on", choices=["on", "off"])
     ap.add_argument("--data-dir", default=None)
     args = ap.parse_args()
     data_dir = args.data_dir or tempfile.mkdtemp(prefix="adslog_")
@@ -58,7 +62,13 @@ def main():
 
     loader = StreamingLoader(ds, workers=args.workers, prefetch=4,
                              columns=plan.required_columns)
-    runner = PipelinedRunner(plan.layers, train_step, prefetch=2)
+    feeder = None
+    if args.device_feed == "on":
+        # Arena sized at compile time: slot widths from the plan's
+        # OutputLayout, row count from the dataset manifest.
+        feeder = DeviceFeeder(plan.feed_layout(), rows_hint=loader.rows_hint)
+    runner = PipelinedRunner(plan.layers, train_step, prefetch=2,
+                             device_feed=feeder)
     state = runner.run({"sum": 0.0, "batches": 0}, loader)
 
     st = runner.stats
@@ -67,6 +77,8 @@ def main():
           f"(fe={st.fe_seconds:.2f}s + train={st.train_seconds:.2f}s "
           f"overlapped)")
     print(f"   ingest: {loader.stats.summary()}")
+    if st.feed is not None:
+        print(f"   device-feed: {st.feed.summary()}")
     print("stream_train OK")
 
 

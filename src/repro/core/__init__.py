@@ -18,6 +18,7 @@ from repro.core.metakernel import (
     run_unfused,
 )
 from repro.core.mempool import ALIGN, Allocation, ArenaPool, align_up, plan_offsets, required_capacity
+from repro.core.devicefeed import DeviceFeeder, FeedError, FeedLayout, FeedStats, SlotSpec
 from repro.core.pipeline import PipelinedRunner, PipelineStats, StagedRunner
 
 __all__ = [
@@ -25,6 +26,11 @@ __all__ = [
     "Allocation",
     "ArenaPool",
     "Device",
+    "DeviceFeeder",
+    "FeedError",
+    "FeedLayout",
+    "FeedStats",
+    "SlotSpec",
     "ExecutionStats",
     "FuncDef",
     "Layer",

@@ -1,0 +1,307 @@
+"""Async device-feed stage: arena-staged double-buffered H2D transfers.
+
+The third pipeline stage (read+extract -> **H2D stage** -> train). The FE
+worker hands host feature environments to a :class:`DeviceFeeder`, which
+stages each batch's ``batch_*`` output slots through a pre-allocated flat
+byte arena (paper §V, Alg. 1: one prefix-sum placement plan + one head bump
+per batch, O(1) pointer rewind between batches) and issues **one**
+``jax.device_put`` per batch — the arena is the unit of transfer, so the
+host->device hop for batch i+1 overlaps training on batch i instead of
+sitting on the training critical path.
+
+Staging layout is static: :class:`FeedLayout` (derived at compile time from
+a plan's :class:`~repro.fe.compiler.OutputLayout` via
+``FeaturePlan.feed_layout()``) fixes per-slot row widths and dtypes, so the
+arena is sized once and per-batch placement is a cached plan, not a fresh
+allocation. Each slot is transferred with its own ``jax.device_put`` from
+an aligned typed view of the arena — pure transfers, deliberately **not**
+a jitted repack: transfers bypass the device execution queue, so staging
+never serializes behind the in-flight train step (a jitted unpack would).
+
+Buffer reuse is gated on *liveness*, not transfer completion:
+``jax.device_put`` may zero-copy a well-aligned host view (and whether it
+does is backend- and call-path-dependent), so a staged device array can
+alias the arena bytes for as long as it lives. The ring therefore tracks
+its handed-out arrays by weakref and rewrites a buffer only once every
+array staged from it is dead (the consumer dropped the batch); a buffer
+whose batch is still referenced is *retired* — left to the garbage
+collector, which frees it when the last consumer reference dies — and
+replaced with a fresh allocation (``FeedStats.retires`` counts these). In
+the steady pipeline state (consumer drops each env after its train step)
+the default ring of 3 — one being written, one in flight, one held by the
+consumer — recycles with zero retires, preserving the pool's
+allocate-once behavior.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+import weakref
+from typing import Any, Dict, List, Mapping, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.mempool import ALIGN, Allocation, ArenaPool, align_up, plan_offsets
+
+
+@dataclasses.dataclass(frozen=True)
+class SlotSpec:
+    """One staged output slot: fixed per-row width and element dtype."""
+
+    name: str
+    width: int          # elements per row ([rows, width]; rank1 -> [rows])
+    dtype: str          # numpy dtype name (itemsize divides the alignment)
+    rank1: bool = False
+
+    @property
+    def itemsize(self) -> int:
+        return np.dtype(self.dtype).itemsize
+
+    def nbytes(self, rows: int) -> int:
+        return int(rows) * self.width * self.itemsize
+
+
+@dataclasses.dataclass(frozen=True)
+class FeedLayout:
+    """Static staging layout: the compile-time contract of the feed stage.
+
+    Sizes depend only on the batch row count, so arena capacity and slot
+    placement are known before the first batch arrives.
+    """
+
+    slots: Tuple[SlotSpec, ...]
+    align: int = ALIGN  # byte alignment of slot starts inside the arena
+
+    def __post_init__(self) -> None:
+        if not self.slots:
+            raise ValueError("FeedLayout needs at least one slot")
+        names = [s.name for s in self.slots]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate slot names: {names}")
+
+    @property
+    def slot_names(self) -> Tuple[str, ...]:
+        return tuple(s.name for s in self.slots)
+
+    def sizes(self, rows: int) -> List[int]:
+        """Per-slot byte sizes for a batch of ``rows`` instances."""
+        return [s.nbytes(rows) for s in self.slots]
+
+    def bytes_per_batch(self, rows: int) -> int:
+        """Payload bytes staged per batch (before arena alignment)."""
+        return sum(self.sizes(rows))
+
+    def arena_bytes(self, rows: int) -> int:
+        """Aligned arena capacity one batch of ``rows`` instances needs."""
+        return int(align_up(sum(align_up(n, self.align)
+                                for n in self.sizes(rows)), self.align))
+
+    def plan(self, rows: int, *, use_kernel: bool = False
+             ) -> Tuple[np.ndarray, int]:
+        """Alg. 1 placement plan: per-slot arena offsets + total bytes.
+
+        ``use_kernel=False`` runs :func:`repro.core.mempool.plan_offsets`
+        (the jit-traceable prefix-sum path); ``use_kernel=True`` routes
+        through the Pallas allocator kernel
+        (:func:`repro.kernels.mempool_alloc.ops.plan_allocation`). Both are
+        oracle-checked against :class:`ArenaPool` in the tests.
+        """
+        if use_kernel:
+            from repro.kernels.mempool_alloc.ops import plan_block
+            return plan_block(self.sizes(rows), align=self.align)
+        offsets, total = plan_offsets(
+            jnp.asarray(self.sizes(rows), jnp.int32), align=self.align)
+        return np.asarray(offsets), int(total)
+
+
+@dataclasses.dataclass
+class FeedStats:
+    """Where the feed tier's time and bytes went."""
+
+    batches: int = 0
+    bytes_staged: int = 0       # payload bytes copied host->device
+    h2d_seconds: float = 0.0    # staging copy + transfer dispatch
+    stall_seconds: float = 0.0  # waiting for in-flight transfers on flush
+    arena_capacity: int = 0     # bytes per host buffer
+    buffers: int = 0
+    rewinds: int = 0            # O(1) arena resets (one per staged batch)
+    reallocs: int = 0           # capacity regrows (batch exceeded the hint)
+    retires: int = 0            # buffers replaced while their batch was live
+
+    @property
+    def h2d_bytes_per_second(self) -> float:
+        return self.bytes_staged / max(self.h2d_seconds, 1e-9)
+
+    def summary(self) -> str:
+        return (f"batches={self.batches} "
+                f"staged={self.bytes_staged / 2**20:.1f}MiB "
+                f"h2d={self.h2d_seconds:.2f}s "
+                f"({self.h2d_bytes_per_second / 2**20:.0f}MiB/s) "
+                f"stall={self.stall_seconds:.2f}s "
+                f"arena={self.arena_capacity / 2**10:.0f}KiB x{self.buffers} "
+                f"rewinds={self.rewinds} reallocs={self.reallocs} "
+                f"retires={self.retires}")
+
+
+class FeedError(RuntimeError):
+    """A batch violated the feed layout's static shape contract."""
+
+
+class DeviceFeeder:
+    """Stage feature batches into device memory through a double-buffered arena.
+
+    Used standalone (``env = feeder.stage(env)``) or as the middle stage of
+    :class:`~repro.core.pipeline.PipelinedRunner` (``device_feed=feeder``),
+    where a dedicated thread stages batch i+1 while batch i trains.
+
+    Parameters
+    ----------
+    layout:
+        The static :class:`FeedLayout` (``FeaturePlan.feed_layout()``).
+    rows_hint:
+        Expected batch row count; pre-sizes the arenas at construction
+        (compile time). Larger batches still work — the arena regrows and
+        ``FeedStats.reallocs`` counts the event.
+    buffers:
+        Staging arenas cycling round-robin. The default 3 matches the
+        three-stage pipeline's steady state — one buffer being written,
+        one whose transfer is in flight, one held by the consumer — so
+        recycling needs no retires (see module docstring).
+    device:
+        Target device for ``jax.device_put`` (default backend if None).
+    """
+
+    def __init__(self, layout: FeedLayout, *, rows_hint: Optional[int] = None,
+                 buffers: int = 3, device=None) -> None:
+        if buffers < 1:
+            raise ValueError(f"buffers must be >= 1, got {buffers}")
+        self.layout = layout
+        self.buffers = buffers
+        self.device = device
+        self.stats = FeedStats(buffers=buffers)
+        self.pool: Optional[ArenaPool] = None
+        self.last_allocs: List[Allocation] = []  # placement of the last batch
+        self._rewinds_prior = 0  # resets of pools replaced by a regrow
+        self._host: List[Optional[np.ndarray]] = [None] * buffers
+        # weakrefs to the arrays staged from each buffer: liveness gate
+        self._inflight: List[List["weakref.ref"]] = [[] for _ in range(buffers)]
+        self._next = 0
+        if rows_hint is not None:
+            self._ensure_capacity(int(rows_hint))
+
+    # ------------------------------------------------------------ arena mgmt
+    def _ensure_capacity(self, rows: int) -> None:
+        need = self.layout.arena_bytes(rows)
+        if self.pool is not None:
+            if need <= self.pool.capacity:
+                return
+            self.stats.reallocs += 1
+            self._rewinds_prior += self.pool.n_resets
+        self.pool = ArenaPool(need, align=self.layout.align)
+        # Old buffers are simply dropped: any staged array that aliases one
+        # keeps it alive until the consumer lets go.
+        self._host = [np.zeros(need, dtype=np.uint8)
+                      for _ in range(self.buffers)]
+        self._inflight = [[] for _ in range(self.buffers)]
+        self._next = 0
+        self.stats.arena_capacity = need
+
+    def _claim_buffer(self) -> int:
+        """Next ring slot; a buffer whose batch is still referenced is
+        retired (GC frees it once the consumer drops the arrays) and
+        replaced, so staged arrays are never overwritten."""
+        b = self._next
+        self._next = (self._next + 1) % self.buffers
+        if any(r() is not None for r in self._inflight[b]):
+            self.stats.retires += 1
+            self._host[b] = np.zeros(self.pool.capacity, dtype=np.uint8)
+        self._inflight[b] = []
+        return b
+
+    # --------------------------------------------------------------- staging
+    def _rows(self, env: Mapping[str, Any]) -> int:
+        name = self.layout.slots[0].name
+        try:
+            return int(np.asarray(env[name]).shape[0])
+        except KeyError:
+            raise FeedError(
+                f"batch is missing staged slot {name!r} "
+                f"(layout slots: {self.layout.slot_names})") from None
+
+    @staticmethod
+    def _slot_host(env: Mapping[str, Any], spec: SlotSpec) -> np.ndarray:
+        """Fetch a slot's host array, deriving per-field ``batch_field_NN``
+        columns from a packed ``batch_sparse`` when the env carries the
+        packed form (split layouts work with unmodified FE output)."""
+        if spec.name in env:
+            return np.ascontiguousarray(np.asarray(env[spec.name]))
+        if spec.name.startswith("batch_field_") and "batch_sparse" in env:
+            idx = int(spec.name[len("batch_field_"):])
+            sparse = np.asarray(env["batch_sparse"])
+            if idx < sparse.shape[1]:
+                return np.ascontiguousarray(sparse[:, idx])
+        raise FeedError(
+            f"batch is missing staged slot {spec.name!r} "
+            f"(batch slots: {sorted(k for k in env if k.startswith('batch_'))})")
+
+    def stage(self, env: Mapping[str, Any]) -> Dict[str, Any]:
+        """Stage one batch: plan -> copy into arena -> async H2D of the views.
+
+        Returns the environment with the layout's slots replaced by device
+        arrays (bitwise-equal values); all other slots pass through.
+        """
+        rows = self._rows(env)
+        self._ensure_capacity(rows)
+        assert self.pool is not None
+
+        b = self._claim_buffer()
+        t0 = time.perf_counter()
+        # Alg. 1 per meta-batch: O(1) rewind, then one block allocation.
+        self.pool.reset()
+        allocs = self.pool.alloc_block(self.layout.sizes(rows))
+        self.last_allocs = allocs
+        buf = self._host[b]
+        payload = 0
+        devs: List[jax.Array] = []
+        for spec, alloc in zip(self.layout.slots, allocs):
+            arr = self._slot_host(env, spec)
+            if arr.dtype != np.dtype(spec.dtype):
+                raise FeedError(
+                    f"slot {spec.name!r}: dtype {arr.dtype} != layout "
+                    f"{spec.dtype} (pass a custom FeedLayout)")
+            want = (rows,) if spec.rank1 else (rows, spec.width)
+            if arr.shape != want:
+                raise FeedError(
+                    f"slot {spec.name!r}: shape {arr.shape} != layout {want}")
+            buf[alloc.offset:alloc.offset + arr.nbytes] = \
+                arr.reshape(-1).view(np.uint8)
+            # Aligned typed view of the arena bytes — the transfer source.
+            # The buffer is not rewritten while any of these arrays lives,
+            # so a zero-copying device_put is as safe as a copying one.
+            view = (buf[alloc.offset:alloc.offset + arr.nbytes]
+                    .view(spec.dtype).reshape(want))
+            devs.append(jax.device_put(view, self.device))
+            payload += arr.nbytes
+        self._inflight[b] = [weakref.ref(d) for d in devs]
+
+        out = dict(env)
+        out.update({spec.name: dev
+                    for spec, dev in zip(self.layout.slots, devs)})
+        self.stats.h2d_seconds += time.perf_counter() - t0
+        self.stats.batches += 1
+        self.stats.bytes_staged += payload
+        self.stats.rewinds = self._rewinds_prior + self.pool.n_resets
+        return out
+
+    def flush(self) -> None:
+        """Block until every still-live staged array's transfer completed."""
+        t0 = time.perf_counter()
+        for refs in self._inflight:
+            for r in refs:
+                dev = r()
+                if dev is not None:
+                    dev.block_until_ready()
+        self.stats.stall_seconds += time.perf_counter() - t0

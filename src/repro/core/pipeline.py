@@ -9,7 +9,12 @@ Two executors are provided so the benchmarks can reproduce Table II:
 * :class:`PipelinedRunner` — FeatureBox mode. A host prefetch thread runs the
   FE schedule for batch i+1 while the device trains on batch i (double
   buffering). JAX's async dispatch provides the device-side overlap; the
-  bounded queue provides backpressure.
+  bounded queue provides backpressure. With ``device_feed`` set to a
+  :class:`~repro.core.devicefeed.DeviceFeeder`, a third stage is inserted —
+  *read+extract -> H2D stage -> train* — where a dedicated thread stages
+  batch i+1 through a buffer-ring staging arena (block-planned async
+  transfers) while batch i trains, so host->device transfer leaves the training
+  critical path too. ``device_feed=None`` keeps the two-stage behavior.
 * :class:`StagedRunner` — the MapReduce-style baseline: stage after stage,
   each stage writes its full output to disk (the "intermediate files" of
   Fig. 1 upper) and the next stage reads it back. Tracks intermediate bytes
@@ -32,6 +37,7 @@ from typing import Any, Callable, Dict, Iterable, Iterator, List, Mapping, Optio
 
 import numpy as np
 
+from repro.core.devicefeed import DeviceFeeder
 from repro.core.metakernel import ExecutionStats, LayerExecutable, run_layers
 
 # Sentinel for end-of-stream in the prefetch queue.
@@ -43,12 +49,19 @@ class PipelineStats:
     batches: int = 0
     fe_seconds: float = 0.0
     train_seconds: float = 0.0
+    # StagedRunner only: time draining the batch source up front (disk reads
+    # with no compute overlap). Accounted so wall == fe + train + drain +
+    # small overhead instead of misreading the gap as overhead.
+    drain_seconds: float = 0.0
     wall_seconds: float = 0.0
     intermediate_bytes: int = 0  # bytes written to disk between stages
     exec_stats: ExecutionStats = dataclasses.field(default_factory=ExecutionStats)
     # When the batch source is a repro.io.StreamingLoader, its IngestStats
     # (disk bytes/s, queue stalls) are attached here after run().
     ingest: Optional[Any] = None
+    # When a DeviceFeeder staged the batches, its FeedStats (h2d bytes/s,
+    # arena rewinds, buffer stalls) are attached here after run().
+    feed: Optional[Any] = None
 
 
 def _capture_ingest(stats: PipelineStats, batches: Any) -> None:
@@ -62,7 +75,12 @@ def _capture_ingest(stats: PipelineStats, batches: Any) -> None:
 
 
 class PipelinedRunner:
-    """FeatureBox: FE for batch i+1 overlaps training on batch i."""
+    """FeatureBox: FE for batch i+1 overlaps training on batch i.
+
+    With ``device_feed`` set, an H2D staging thread is inserted between the
+    FE worker and the train loop (three-stage pipeline); ``None`` keeps the
+    two-stage path and hands host environments straight to ``train_step``.
+    """
 
     def __init__(
         self,
@@ -71,11 +89,13 @@ class PipelinedRunner:
         *,
         prefetch: int = 2,
         device=None,
+        device_feed: Optional[DeviceFeeder] = None,
     ) -> None:
         self.layers = layers
         self.train_step = train_step
         self.prefetch = prefetch
         self.device = device
+        self.device_feed = device_feed
         self.stats = PipelineStats()
 
     def _fe_worker(self, batches: Iterator[Mapping[str, Any]],
@@ -107,6 +127,32 @@ class PipelinedRunner:
                 if stop.is_set():
                     return
 
+    def _feed_worker(self, q: "queue.Queue", out: "queue.Queue",
+                     stop: threading.Event) -> None:
+        """H2D stage: pull extracted envs, stage batch i+1 while i trains.
+
+        Sentinels and FE-worker exceptions pass through unchanged so the
+        consumer sees the original failure, not a feed artifact.
+        """
+        try:
+            while True:
+                try:
+                    item = q.get(timeout=0.1)
+                except queue.Empty:
+                    if stop.is_set():
+                        return
+                    continue
+                if item is _DONE:
+                    self._put(out, _DONE, stop)
+                    return
+                if isinstance(item, BaseException):
+                    self._put(out, item, stop)
+                    continue  # _DONE follows from the FE worker
+                self._put(out, self.device_feed.stage(item), stop)
+        except BaseException as e:  # staging failure: surface + terminate
+            self._put(out, e, stop)
+            self._put(out, _DONE, stop)
+
     def run(self, state: Any, batches: Iterable[Mapping[str, Any]]) -> Any:
         q: "queue.Queue" = queue.Queue(maxsize=self.prefetch)
         stop = threading.Event()
@@ -115,10 +161,27 @@ class PipelinedRunner:
             target=self._fe_worker, args=(iter(batches), q, stop),
             daemon=True, name="fe-worker",
         )
-        worker.start()
+        threads = [worker]
+        queues = [q]
+        out_q = q
+        if self.device_feed is not None:
+            # Bounded by the buffer ring: with one batch held by the train
+            # loop and one being staged, at most buffers-2 more fit in the
+            # queue before a ring slot would have to be retired.
+            feed_q: "queue.Queue" = queue.Queue(
+                maxsize=max(1, self.device_feed.buffers - 2))
+            feeder = threading.Thread(
+                target=self._feed_worker, args=(q, feed_q, stop),
+                daemon=True, name="h2d-feeder",
+            )
+            threads.append(feeder)
+            queues.append(feed_q)
+            out_q = feed_q
+        for t in threads:
+            t.start()
         try:
             while True:
-                item = q.get()
+                item = out_q.get()
                 if item is _DONE:
                     break
                 if isinstance(item, BaseException):
@@ -127,14 +190,25 @@ class PipelinedRunner:
                 state = self.train_step(state, item)
                 self.stats.train_seconds += time.perf_counter() - t0
                 self.stats.batches += 1
+                # Release the env before blocking on the next get: a staged
+                # batch held here would keep its feed-ring buffer live and
+                # force the feeder to retire it.
+                del item
         finally:
             stop.set()
-            try:  # release a worker blocked on a full queue
-                while True:
-                    q.get_nowait()
-            except queue.Empty:
-                pass
-            worker.join(timeout=5.0)
+            for qq in queues:  # release workers blocked on a full queue
+                try:
+                    while True:
+                        qq.get_nowait()
+                except queue.Empty:
+                    pass
+            for t in threads:
+                t.join(timeout=5.0)
+            if self.device_feed is not None:
+                # Drain still-live transfers so wall time covers them and
+                # FeedStats.stall_seconds reflects the end-of-stream wait.
+                self.device_feed.flush()
+                self.stats.feed = self.device_feed.stats
             self.stats.wall_seconds = time.perf_counter() - t_start
             _capture_ingest(self.stats, batches)
         return state
@@ -194,8 +268,10 @@ class StagedRunner:
     def run(self, state: Any, batches: Iterable[Mapping[str, Any]]) -> Any:
         t_start = time.perf_counter()
         # A StreamingLoader source is drained up front: the staged baseline
-        # by definition has no read/compute overlap.
+        # by definition has no read/compute overlap. That read time is its
+        # own accounting bucket (drain_seconds), not fe/train overhead.
         all_batches = list(batches)
+        self.stats.drain_seconds = time.perf_counter() - t_start
         _capture_ingest(self.stats, batches)
         # Stage-after-stage: run *every* batch through layer k, materialize,
         # then move to layer k+1 — the defining property of the baseline.

@@ -68,6 +68,25 @@ class OutputLayout:
     def sparse_id_space(self) -> int:
         return self.n_sparse_fields * self.field_size
 
+    def feed_slots(self) -> Tuple[Tuple[str, int, str, bool], ...]:
+        """Static H2D staging contract: (slot, row width, dtype, rank1).
+
+        The per-row element widths and dtypes of every ``batch_*`` output a
+        spec with this layout emits — what the device-feed tier needs to
+        size its arenas at compile time (``FeaturePlan.feed_layout()``
+        wraps these into :class:`repro.core.devicefeed.SlotSpec`).
+        """
+        slots: List[Tuple[str, int, str, bool]] = [
+            ("batch_label", 1, "float32", True)]
+        if self.n_dense_feats:
+            slots.append(("batch_dense", self.n_dense_feats, "float32", False))
+        if self.n_sparse_fields:
+            slots.append(("batch_sparse", self.n_sparse_fields, "int32", False))
+        if self.seq_len:
+            slots.append(("batch_seq_ids", self.seq_len, "int32", False))
+            slots.append(("batch_seq_mask", self.seq_len, "float32", False))
+        return tuple(slots)
+
 
 class SpecError(ValueError):
     """A FeatureSpec that cannot be lowered (bad reference, type mismatch)."""

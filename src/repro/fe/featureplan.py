@@ -68,6 +68,38 @@ class FeaturePlan:
         """Filter an environment down to this plan's ``batch_*`` outputs."""
         return {k: env[k] for k in self.output_slots}
 
+    def feed_layout(self, *, split_sparse_fields: bool = False):
+        """Static H2D staging layout for this plan's ``batch_*`` outputs.
+
+        Derived from :attr:`layout` at compile time, so a
+        :class:`~repro.core.devicefeed.DeviceFeeder` can size its staging
+        arenas before the first batch arrives:
+
+            feeder = DeviceFeeder(plan.feed_layout(), rows_hint=batch_rows)
+            runner = PipelinedRunner(plan.layers, step, device_feed=feeder)
+
+        ``split_sparse_fields=True`` replaces the packed ``batch_sparse``
+        slot with one rank-1 ``batch_field_NN`` id vector per sparse field —
+        the shape per-table embedding consumers feed — so the arena's block
+        allocation (Alg. 1) coalesces the many per-field transfers into one
+        planned staging pass. Total staged bytes are unchanged, and the
+        feeder derives the field columns from a packed ``batch_sparse``
+        automatically, so the split layout works on unmodified FE output.
+        """
+        from repro.core.devicefeed import FeedLayout, SlotSpec
+        emitted = set(self.output_slots)
+        slots = []
+        for name, width, dtype, rank1 in self.layout.feed_slots():
+            if name not in emitted:
+                continue
+            if name == "batch_sparse" and split_sparse_fields:
+                slots.extend(SlotSpec(f"batch_field_{i:02d}", 1, dtype,
+                                      rank1=True)
+                             for i in range(width))
+            else:
+                slots.append(SlotSpec(name, width, dtype, rank1=rank1))
+        return FeedLayout(slots=tuple(slots))
+
     def summary(self) -> str:
         s = self.schedule
         lay = self.layout

@@ -136,6 +136,22 @@ class StreamingLoader:
         self._out: Optional[queue.Queue] = None
         self._running = False
 
+    @property
+    def rows_hint(self) -> Optional[int]:
+        """Largest shard row count this loader will emit, if known.
+
+        Pre-sizes downstream staging arenas (``DeviceFeeder(rows_hint=...)``)
+        at compile time from the dataset manifest instead of growing on the
+        first oversized batch. ``None`` when the source carries no row
+        counts (plain path lists).
+        """
+        if isinstance(self.source, ShardDataset):
+            rows = [s.n_rows for s in self.source.local_shards if s.n_rows]
+            return max(rows) if rows else None
+        rows = [s.n_rows for s in self.source
+                if isinstance(s, ShardInfo) and s.n_rows]
+        return max(rows) if rows else None
+
     # ------------------------------------------------------------- plumbing
     def _shard_plan(self) -> List[ShardInfo]:
         plan: List[ShardInfo] = []

@@ -6,8 +6,11 @@ falls back to the jnp reference for shapes the kernel doesn't support.
 
 from __future__ import annotations
 
+from typing import Sequence, Tuple
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.mempool import ALIGN
 from repro.kernels.mempool_alloc.kernel import alloc_offsets
@@ -27,3 +30,21 @@ def plan_allocation(sizes: jax.Array, *, align: int = ALIGN, use_kernel: bool = 
         return alloc_offsets_ref(sizes, align=align)
     interpret = jax.default_backend() != "tpu"
     return alloc_offsets(sizes, align=align, interpret=interpret)
+
+
+def plan_block(sizes: Sequence[int], *, align: int = ALIGN,
+               use_kernel: bool = True) -> Tuple[np.ndarray, int]:
+    """Host-side sizing entry: plan a block of requests from plain ints.
+
+    The bridge the device-feed tier uses to plan static arena placement at
+    compile time: takes ordinary Python sizes, runs the allocator kernel
+    (or its reference), and returns ``(offsets int64[N], total)`` ready for
+    host bookkeeping. Oracle-equivalent to
+    :meth:`repro.core.mempool.ArenaPool.alloc_block`.
+    """
+    arr = jnp.asarray(list(sizes), jnp.int32)
+    if arr.ndim != 1:
+        raise ValueError(f"sizes must be rank-1, got {arr.shape}")
+    offsets, head = plan_allocation(arr, align=align, use_kernel=use_kernel)
+    total = int(np.asarray(head).reshape(-1)[0]) if arr.shape[0] else 0
+    return np.asarray(offsets, dtype=np.int64), total

@@ -103,7 +103,7 @@ def fe_env_to_model_batch(env: Dict[str, Any], cfg) -> Dict[str, Any]:
 
 def run_streaming(args, spec, cfg, train_step, state) -> None:
     """Stream raw-log shards from disk through FE into the train step."""
-    from repro.core import PipelinedRunner
+    from repro.core import DeviceFeeder, PipelinedRunner
     from repro.fe import featureplan, get_spec
     from repro.io.dataset import ShardDataset
     from repro.io.stream import StreamingLoader
@@ -148,7 +148,14 @@ def run_streaming(args, spec, cfg, train_step, state) -> None:
             ckpt.save_async(len(losses) - 1, state)
         return state
 
-    runner = PipelinedRunner(plan.layers, step_fn, prefetch=args.stream_prefetch)
+    feeder = None
+    if args.device_feed == "on":
+        # Third pipeline stage: batch i+1 is staged through the buffer-ring
+        # device arena while batch i trains. Arena sized up front from the
+        # dataset manifest via the loader's rows hint.
+        feeder = DeviceFeeder(plan.feed_layout(), rows_hint=loader.rows_hint)
+    runner = PipelinedRunner(plan.layers, step_fn,
+                             prefetch=args.stream_prefetch, device_feed=feeder)
     shard_iter = iter(loader)  # kept so the generator can be closed below
     t0 = time.perf_counter()
     try:
@@ -176,6 +183,8 @@ def run_streaming(args, spec, cfg, train_step, state) -> None:
           f"fe={s.fe_seconds:.2f}s train={s.train_seconds:.2f}s "
           f"wall={s.wall_seconds:.2f}s)")
     print(f"ingest: {loader.stats.summary()}")
+    if s.feed is not None:
+        print(f"device-feed: {s.feed.summary()}")
 
 
 def main() -> None:
@@ -196,6 +205,9 @@ def main() -> None:
                          "(declarative FE scenario preset)")
     ap.add_argument("--gen-shards", type=int, default=0,
                     help="generate this many shards into --data-dir first")
+    ap.add_argument("--device-feed", default="off", choices=["on", "off"],
+                    help="stage batches through a buffer-ring device arena "
+                         "on a third pipeline stage (H2D overlaps training)")
     ap.add_argument("--stream-workers", type=int, default=2)
     ap.add_argument("--stream-prefetch", type=int, default=4)
     ap.add_argument("--host-id", type=int, default=0)

@@ -1,0 +1,16 @@
+"""Shared test helpers."""
+
+import threading
+import time
+
+PIPELINE_THREADS = ("fe-worker", "h2d-feeder")
+
+
+def pipeline_threads_gone(names=PIPELINE_THREADS, timeout=5.0):
+    """Poll until no runner worker thread with one of ``names`` is alive."""
+    deadline = time.perf_counter() + timeout
+    while time.perf_counter() < deadline:
+        if not [t for t in threading.enumerate() if t.name in names]:
+            return True
+        time.sleep(0.05)
+    return False

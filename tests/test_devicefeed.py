@@ -1,0 +1,283 @@
+"""Device-feed stage: arena sizing from OutputLayout, double-buffer rewinds,
+bitwise staging, runner integration, and runner equivalence (property)."""
+
+import numpy as np
+import pytest
+from conftest import pipeline_threads_gone
+
+from repro.core import (
+    ALIGN,
+    DeviceFeeder,
+    FeedError,
+    PipelinedRunner,
+    StagedRunner,
+    align_up,
+)
+from repro.fe import featureplan, get_spec, list_specs
+from repro.fe.datagen import gen_views
+
+PRESETS = list_specs()
+
+
+# ------------------------------------------------------- arena sizing (layout)
+@pytest.mark.parametrize("name", PRESETS)
+def test_feed_layout_matches_output_layout(name):
+    plan = featureplan.compile(get_spec(name))
+    lay, fl = plan.layout, plan.feed_layout()
+    widths = {s.name: s.width for s in fl.slots}
+    assert set(widths) == set(plan.output_slots)
+    assert widths["batch_label"] == 1
+    if "batch_dense" in widths:
+        assert widths["batch_dense"] == lay.n_dense_feats
+    else:
+        assert lay.n_dense_feats == 0
+    assert widths["batch_sparse"] == lay.n_sparse_fields
+    assert widths["batch_seq_ids"] == lay.seq_len
+    assert widths["batch_seq_mask"] == lay.seq_len
+
+    rows = 96
+    # arena capacity == aligned sum of the layout's slot sizes
+    expect = align_up(sum(align_up(s.nbytes(rows), ALIGN) for s in fl.slots),
+                      ALIGN)
+    assert fl.arena_bytes(rows) == expect
+    feeder = DeviceFeeder(fl, rows_hint=rows)
+    assert feeder.stats.arena_capacity == expect
+    assert feeder.pool.capacity == expect
+
+
+@pytest.mark.parametrize("name", PRESETS)
+def test_placement_plan_oracle_agreement(name):
+    """jnp prefix-sum plan == Pallas allocator kernel == ArenaPool bump."""
+    fl = featureplan.compile(get_spec(name)).feed_layout()
+    rows = 64
+    off_jnp, total_jnp = fl.plan(rows)
+    off_k, total_k = fl.plan(rows, use_kernel=True)
+    np.testing.assert_array_equal(off_jnp, off_k)
+    assert total_jnp == total_k == fl.arena_bytes(rows)
+
+    feeder = DeviceFeeder(fl, rows_hint=rows)
+    feeder.stage(featureplan.compile(get_spec(name)).run(
+        gen_views(rows, seed=2)))
+    np.testing.assert_array_equal(
+        [a.offset for a in feeder.last_allocs], off_jnp)
+
+
+def test_split_sparse_fields_layout_preserves_bytes():
+    """Per-field staging (one rank-1 id vector per sparse field) keeps the
+    total staged bytes identical to the packed batch_sparse layout."""
+    plan = featureplan.compile(get_spec("dlrm"))
+    packed = plan.feed_layout()
+    split = plan.feed_layout(split_sparse_fields=True)
+    n_fields = plan.layout.n_sparse_fields
+    fields = [s for s in split.slots if s.name.startswith("batch_field_")]
+    assert len(fields) == n_fields == 26
+    assert all(s.width == 1 and s.rank1 and s.dtype == "int32"
+               for s in fields)
+    assert "batch_sparse" not in split.slot_names
+    rows = 128
+    assert split.bytes_per_batch(rows) == packed.bytes_per_batch(rows)
+
+    # staging the split form is bitwise the packed columns
+    env = plan.run(gen_views(rows, seed=11))
+    sparse = np.asarray(env["batch_sparse"])
+    host = {k: v for k, v in env.items() if k != "batch_sparse"}
+    for f in range(n_fields):
+        host[f"batch_field_{f:02d}"] = np.ascontiguousarray(sparse[:, f])
+    feeder = DeviceFeeder(split, rows_hint=rows)
+    staged = feeder.stage(host)
+    for f in range(n_fields):
+        np.testing.assert_array_equal(
+            np.asarray(staged[f"batch_field_{f:02d}"]), sparse[:, f])
+    assert feeder.stats.bytes_staged == packed.bytes_per_batch(rows)
+
+
+# ----------------------------------------------------- double-buffered rewind
+def test_double_buffer_rewind_reuses_offsets_bitwise():
+    plan = featureplan.compile(get_spec("ads_ctr"))
+    feeder = DeviceFeeder(plan.feed_layout(), rows_hint=32, buffers=2)
+    host_ids = [id(h) for h in feeder._host]
+    offsets = []
+    for i in range(4):
+        # each staged batch is dropped before the next stage() — the steady
+        # pipeline state — so ring slots recycle without retires
+        feeder.stage(plan.run(gen_views(32, seed=10 + i)))
+        offsets.append([a.offset for a in feeder.last_allocs])
+    assert offsets[0] == offsets[1] == offsets[2] == offsets[3]
+    assert feeder.pool.n_resets == 4 == feeder.stats.rewinds
+    assert feeder.stats.reallocs == 0
+    assert feeder.stats.retires == 0
+    assert [id(h) for h in feeder._host] == host_ids  # O(1) rewind, no
+    assert feeder.stats.batches == 4                  # fresh buffers
+    assert feeder.stats.bytes_staged == 4 * plan.feed_layout().bytes_per_batch(32)
+
+
+def test_feeder_grows_arena_for_oversized_batch():
+    plan = featureplan.compile(get_spec("bst"))
+    fl = plan.feed_layout()
+    feeder = DeviceFeeder(fl, rows_hint=16)
+    small = feeder.stats.arena_capacity
+    feeder.stage(plan.run(gen_views(16, seed=4)))
+    env = plan.run(gen_views(64, seed=5))
+    staged = feeder.stage(env)
+    assert feeder.stats.reallocs == 1
+    assert feeder.stats.arena_capacity == fl.arena_bytes(64) > small
+    # rewind accounting survives the pool replacement (accumulates)
+    assert feeder.stats.rewinds == 2
+    for k in plan.output_slots:
+        np.testing.assert_array_equal(np.asarray(staged[k]),
+                                      np.asarray(env[k]))
+
+
+# --------------------------------------------------------- bitwise staging
+@pytest.mark.parametrize("name", PRESETS)
+def test_staged_slots_bit_identical(name):
+    plan = featureplan.compile(get_spec(name))
+    feeder = DeviceFeeder(plan.feed_layout())
+    env = plan.run(gen_views(48, seed=3))
+    staged = feeder.stage(env)
+    for k in plan.output_slots:
+        a, b = np.asarray(env[k]), np.asarray(staged[k])
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(a, b)
+    # non-layout slots pass through untouched
+    for k in env:
+        if k not in plan.output_slots:
+            assert staged[k] is env[k]
+
+
+def test_arena_reuse_never_corrupts_staged_batches():
+    """Regression: staged device arrays must be *copies* of the arena, not
+    aliases — with buffers=1 every stage() rewrites the same host buffer,
+    so any aliasing shows up as earlier batches mutating."""
+    plan = featureplan.compile(get_spec("ads_ctr"))
+    feeder = DeviceFeeder(plan.feed_layout(), rows_hint=32, buffers=1)
+    staged, snapshots = [], []
+    for i in range(3):
+        out = feeder.stage(plan.run(gen_views(32, seed=30 + i)))
+        kept = {k: out[k] for k in plan.output_slots}
+        staged.append(kept)
+        snapshots.append({k: np.array(np.asarray(v), copy=True)
+                          for k, v in kept.items()})
+    for kept, snap in zip(staged, snapshots):
+        for k in snap:
+            np.testing.assert_array_equal(np.asarray(kept[k]), snap[k])
+    # holding every batch alive forced the single-slot ring to retire
+    assert feeder.stats.retires == 2
+
+
+def test_stage_rejects_layout_violations():
+    plan = featureplan.compile(get_spec("ads_ctr"))
+    feeder = DeviceFeeder(plan.feed_layout())
+    env = plan.run(gen_views(16, seed=0))
+    bad = dict(env)
+    bad["batch_sparse"] = np.asarray(env["batch_sparse"])[:, :-1]
+    with pytest.raises(FeedError, match="shape"):
+        feeder.stage(bad)
+    bad = dict(env)
+    bad["batch_dense"] = np.asarray(env["batch_dense"]).astype(np.float64)
+    with pytest.raises(FeedError, match="dtype"):
+        feeder.stage(bad)
+    with pytest.raises(FeedError, match="missing"):
+        feeder.stage({"impressions": None})
+
+
+# ------------------------------------------------------- runner integration
+def _recording_step(record):
+    def step(state, env):
+        record.append({k: np.asarray(v) for k, v in env.items()
+                       if k.startswith("batch_")})
+        return {"batches": state["batches"] + 1}
+    return step
+
+
+def test_runner_with_feed_matches_no_feed_bitwise():
+    plan = featureplan.compile(get_spec("ads_ctr"))
+    batches = [gen_views(40, seed=60 + i) for i in range(4)]
+
+    seen_off, seen_on = [], []
+    off = PipelinedRunner(plan.layers, _recording_step(seen_off), prefetch=2)
+    off.run({"batches": 0}, [dict(b) for b in batches])
+    feeder = DeviceFeeder(plan.feed_layout(), rows_hint=40)
+    on = PipelinedRunner(plan.layers, _recording_step(seen_on), prefetch=2,
+                         device_feed=feeder)
+    on.run({"batches": 0}, [dict(b) for b in batches])
+
+    assert len(seen_off) == len(seen_on) == 4
+    for a, b in zip(seen_off, seen_on):
+        assert set(a) == set(b)
+        for k in a:
+            assert a[k].dtype == b[k].dtype
+            np.testing.assert_array_equal(a[k], b[k])
+    fs = on.stats.feed
+    assert fs is feeder.stats
+    assert fs.batches == 4
+    assert fs.bytes_staged == 4 * plan.feed_layout().bytes_per_batch(40)
+    assert off.stats.feed is None  # fallback keeps the two-stage shape
+
+
+def test_fallback_none_is_bit_identical_to_direct_run():
+    """device_feed=None must reproduce today's runner output exactly."""
+    plan = featureplan.compile(get_spec("dlrm"))
+    batches = [gen_views(24, seed=80 + i) for i in range(3)]
+    expect = [plan.outputs(plan.run(dict(b))) for b in batches]
+
+    seen = []
+    runner = PipelinedRunner(plan.layers, _recording_step(seen), prefetch=2)
+    runner.run({"batches": 0}, [dict(b) for b in batches])
+    assert len(seen) == 3
+    for got, want in zip(seen, expect):
+        for k in want:
+            np.testing.assert_array_equal(got[k], np.asarray(want[k]))
+
+
+def test_split_layout_stages_packed_fe_output_in_runner():
+    """A split_sparse_fields feeder must work on unmodified FE output: the
+    per-field columns are derived from the packed batch_sparse slot."""
+    plan = featureplan.compile(get_spec("bst"))
+    n_fields = plan.layout.n_sparse_fields
+    feeder = DeviceFeeder(plan.feed_layout(split_sparse_fields=True),
+                          rows_hint=24)
+    seen = []
+    runner = PipelinedRunner(plan.layers, _recording_step(seen), prefetch=2,
+                             device_feed=feeder)
+    batches = [gen_views(24, seed=70 + i) for i in range(2)]
+    runner.run({"batches": 0}, [dict(b) for b in batches])
+    assert len(seen) == 2
+    for env, raw in zip(seen, batches):
+        packed = np.asarray(plan.run(dict(raw))["batch_sparse"])
+        for f in range(n_fields):
+            np.testing.assert_array_equal(env[f"batch_field_{f:02d}"],
+                                          packed[:, f])
+
+
+def test_feeder_propagates_worker_exceptions():
+    plan = featureplan.compile(get_spec("ads_ctr"))
+    feeder = DeviceFeeder(plan.feed_layout())
+    runner = PipelinedRunner(plan.layers, lambda s, e: s, device_feed=feeder)
+
+    def bad_batches():
+        yield gen_views(16, seed=0)
+        raise OSError("shard rot")
+
+    with pytest.raises(OSError, match="shard rot"):
+        runner.run({}, bad_batches())
+    assert pipeline_threads_gone()
+
+
+def test_feed_train_error_joins_both_workers():
+    plan = featureplan.compile(get_spec("ads_ctr"))
+    feeder = DeviceFeeder(plan.feed_layout(), buffers=2)
+
+    def bad_step(state, env):
+        raise ValueError("train blew up")
+
+    runner = PipelinedRunner(plan.layers, bad_step, prefetch=1,
+                             device_feed=feeder)
+    with pytest.raises(ValueError, match="train blew up"):
+        runner.run({}, [gen_views(16, seed=i) for i in range(4)])
+    assert pipeline_threads_gone()
+
+
+# The runner-equivalence property test (hypothesis) lives in
+# tests/test_runner_equivalence.py — importorskip at module level would
+# skip this whole file on hypothesis-free installs.

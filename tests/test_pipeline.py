@@ -3,6 +3,8 @@ identical results, intermediate I/O eliminated (paper Table II semantics)."""
 
 import tempfile
 
+from conftest import pipeline_threads_gone
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -100,3 +102,76 @@ def test_pipeline_propagates_worker_errors():
     import pytest
     with pytest.raises(Exception):
         pipe.run({}, bad_batches())
+
+
+def test_train_step_error_mid_run_stops_and_joins_worker():
+    """train_step raising mid-run (not on batch 0) must drain the queue and
+    join the FE worker within the timeout, with partial progress recorded."""
+    import pytest
+
+    layers = compile_layers(build_schedule(build_fe_graph()))
+    calls = {"n": 0}
+
+    def explode_later(state, env):
+        calls["n"] += 1
+        if calls["n"] == 2:
+            raise RuntimeError("mid-run failure")
+        return state
+
+    pipe = PipelinedRunner(layers, explode_later, prefetch=1)
+    with pytest.raises(RuntimeError, match="mid-run failure"):
+        pipe.run({}, [dict(b) for b in _batches(5)])
+    assert calls["n"] == 2
+    assert pipe.stats.batches == 1  # only the pre-failure batch counted
+    assert pipeline_threads_gone()
+    assert pipe.stats.wall_seconds > 0  # finally-path accounting still runs
+
+
+def test_batch_source_error_surfaces_original_exception():
+    """An iterator raising mid-stream must surface *its* exception (not a
+    bare _DONE/stop artifact), after the prior good batches trained."""
+    import pytest
+
+    layers = compile_layers(build_schedule(build_fe_graph()))
+
+    def flaky_batches():
+        yield dict(_batches(1)[0])
+        raise OSError("shard rot at offset 42")
+
+    pipe = PipelinedRunner(layers, lambda s, e: s, prefetch=2)
+    with pytest.raises(OSError, match="shard rot at offset 42"):
+        pipe.run({}, flaky_batches())
+    assert pipe.stats.batches == 1
+    assert pipeline_threads_gone()
+
+
+def test_staged_drain_time_accounted():
+    """StagedRunner: time draining a slow batch source must land in
+    drain_seconds — not in the wall - fe - train gap — so the accounting
+    closes (the gap no longer misreads ingest time as overhead)."""
+    import time
+
+    layers = compile_layers(build_schedule(build_fe_graph()))
+    delay = 0.08
+
+    def slow_source():
+        for b in _batches(3, rows=32):
+            time.sleep(delay)
+            yield dict(b)
+
+    staged = StagedRunner(layers, _train_step_factory(),
+                          workdir=tempfile.mkdtemp())
+    staged.run({"sum": 0.0, "batches": 0}, slow_source())
+    s = staged.stats
+    assert s.drain_seconds >= 3 * delay * 0.9
+    overhead = s.wall_seconds - s.fe_seconds - s.train_seconds - s.drain_seconds
+    assert overhead >= 0
+    assert overhead < 3 * delay  # the drain time left the "overhead" gap
+
+
+def test_pipelined_drain_seconds_zero():
+    """The pipelined runner never drains up front: the field stays 0."""
+    layers = compile_layers(build_schedule(build_fe_graph()))
+    pipe = PipelinedRunner(layers, _train_step_factory(), prefetch=2)
+    pipe.run({"sum": 0.0, "batches": 0}, [dict(b) for b in _batches(2)])
+    assert pipe.stats.drain_seconds == 0.0

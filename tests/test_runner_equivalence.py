@@ -1,0 +1,111 @@
+"""Runner-equivalence property test: for random small specs and batches,
+``PipelinedRunner`` (with and without the device-feed stage) and
+``StagedRunner`` produce identical final state and identical per-slot
+outputs — previously only the legacy ads_ctr path asserted this."""
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
+
+from repro.core import DeviceFeeder, PipelinedRunner, StagedRunner  # noqa: E402
+from repro.fe import (  # noqa: E402
+    Cross,
+    DenseOutput,
+    FeatureSpec,
+    Hash,
+    Join,
+    LogNorm,
+    Scale,
+    Sequence,
+    SequenceOutput,
+    Source,
+    SparseOutput,
+    featureplan,
+)
+from repro.fe.datagen import IMPRESSIONS, USER_PROFILE, gen_views  # noqa: E402
+
+_HASHES = {
+    "h_user": Hash("h_user", "user_id"),
+    "h_ad": Hash("h_ad", "ad_id", mix=True),
+    "x_user_ad": Cross("x_user_ad", "user_id", "ad_id"),
+}
+_DENSES = {
+    "d_dwell": LogNorm("d_dwell", "dwell_time"),
+    "d_hour": Scale("d_hour", "hour", 24.0),
+}
+
+
+@st.composite
+def _small_specs(draw):
+    fields = draw(st.lists(st.sampled_from(sorted(_HASHES)), min_size=1,
+                           max_size=3, unique=True))
+    dense = draw(st.lists(st.sampled_from(sorted(_DENSES)), max_size=2,
+                          unique=True))
+    with_seq = draw(st.booleans())
+    transforms = [_HASHES[f] for f in fields] + [_DENSES[d] for d in dense]
+    sources = [Source("impressions", IMPRESSIONS)]
+    joins = []
+    outputs = [SparseOutput(tuple(fields))]
+    if dense:
+        outputs.append(DenseOutput(tuple(dense)))
+    if with_seq:
+        sources.append(Source("user_profile", USER_PROFILE))
+        joins.append(Join("user_profile", key="user_id", prefix="u_"))
+        transforms.append(Sequence("s_int", "u_interests", max_len=6))
+        outputs.append(SequenceOutput(("s_int",)))
+    return FeatureSpec(
+        name="prop", base="impressions", sources=tuple(sources),
+        joins=tuple(joins), transforms=tuple(transforms),
+        outputs=tuple(outputs))
+
+
+def _recording_step(record):
+    def step(state, env):
+        record.append({k: np.asarray(v) for k, v in env.items()
+                       if k.startswith("batch_")})
+        return {"batches": state["batches"] + 1}
+    return step
+
+
+@hypothesis.settings(
+    max_examples=8, deadline=None,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow,
+                           hypothesis.HealthCheck.data_too_large])
+@hypothesis.given(spec=_small_specs(),
+                  rows=st.integers(min_value=8, max_value=40),
+                  n_batches=st.integers(min_value=1, max_value=3),
+                  seed=st.integers(min_value=0, max_value=2**16))
+def test_runners_equivalent_on_random_specs(spec, rows, n_batches, seed,
+                                            tmp_path_factory):
+    plan = featureplan.compile(spec)
+    batches = [gen_views(rows, seed=seed + i) for i in range(n_batches)]
+
+    results = []
+    for make in (
+        lambda: PipelinedRunner(plan.layers, None, prefetch=2),
+        lambda: PipelinedRunner(
+            plan.layers, None, prefetch=2,
+            device_feed=DeviceFeeder(plan.feed_layout(), rows_hint=rows)),
+        lambda: StagedRunner(
+            plan.layers, None,
+            workdir=str(tmp_path_factory.mktemp("staged"))),
+    ):
+        runner = make()
+        seen = []
+        runner.train_step = _recording_step(seen)
+        state = runner.run({"batches": 0}, [dict(b) for b in batches])
+        results.append((state, seen))
+
+    (s0, o0) = results[0]
+    assert s0["batches"] == n_batches
+    assert len(o0) == n_batches
+    for s, o in results[1:]:
+        assert s == s0
+        assert len(o) == n_batches
+        for a, b in zip(o0, o):
+            assert set(a) == set(b)
+            for k in a:
+                assert a[k].dtype == b[k].dtype
+                np.testing.assert_array_equal(a[k], b[k])
