@@ -18,26 +18,35 @@ an aligned typed view of the arena — pure transfers, deliberately **not**
 a jitted repack: transfers bypass the device execution queue, so staging
 never serializes behind the in-flight train step (a jitted unpack would).
 
-Buffer reuse is gated on *liveness*, not transfer completion:
-``jax.device_put`` may zero-copy a well-aligned host view (and whether it
-does is backend- and call-path-dependent), so a staged device array can
-alias the arena bytes for as long as it lives. The ring therefore tracks
-its handed-out arrays by weakref and rewrites a buffer only once every
-array staged from it is dead (the consumer dropped the batch); a buffer
-whose batch is still referenced is *retired* — left to the garbage
-collector, which frees it when the last consumer reference dies — and
-replaced with a fresh allocation (``FeedStats.retires`` counts these). In
-the steady pipeline state (consumer drops each env after its train step)
-the default ring of 3 — one being written, one in flight, one held by the
-consumer — recycles with zero retires, preserving the pool's
-allocate-once behavior.
+Buffer reuse is gated on *use-completion*, not Python liveness: the ring
+holds strong references to every array staged from a buffer and rewrites
+the buffer only after each of those arrays is ready (transfer confirmed
+complete). Python liveness is not a safe gate — jax dispatch is async, so
+the consumer can drop its references while the H2D transfer (or a train
+step reading a zero-copy alias) is still in flight; the in-flight
+execution keeps the host memory *alive* but not *immutable*.
+
+Readiness alone is only a safe gate if the staged arrays never alias the
+arena. ``jax.device_put`` may zero-copy a well-aligned host view
+(backend- and alignment-dependent — the CPU backend does for 128-byte-
+aligned sources), and a zero-copied array aliases the staged bytes for
+its whole lifetime: no amount of waiting makes rewriting safe. The
+feeder therefore forces its host buffers to 128-byte-aligned bases (so
+the backend's behavior is deterministic, not malloc luck), probes the
+first transfer, and — where ``device_put`` zero-copies — transfers each
+slot from a private copy of its staged bytes, owned by the device array.
+Staged arrays thus never point into the arena: copying backends
+(discrete-device H2D) pay no extra copy and overlap the real transfer;
+zero-copy backends pay one host memcpy per slot — the price of reusing
+the arena without a consumer completion protocol, on backends where
+there is no transfer to overlap anyway.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
-import weakref
 from typing import Any, Dict, List, Mapping, Optional, Tuple
 
 import jax
@@ -112,8 +121,15 @@ class FeedLayout:
         if use_kernel:
             from repro.kernels.mempool_alloc.ops import plan_block
             return plan_block(self.sizes(rows), align=self.align)
+        sizes = self.sizes(rows)
+        need = sum(align_up(n, self.align) for n in sizes)
+        if need > np.iinfo(np.int32).max:
+            raise OverflowError(
+                f"feed layout needs {need} aligned bytes for rows={rows}, "
+                f"which overflows the planner's int32 offsets; split the "
+                f"batch")
         offsets, total = plan_offsets(
-            jnp.asarray(self.sizes(rows), jnp.int32), align=self.align)
+            jnp.asarray(sizes, jnp.int32), align=self.align)
         return np.asarray(offsets), int(total)
 
 
@@ -124,12 +140,11 @@ class FeedStats:
     batches: int = 0
     bytes_staged: int = 0       # payload bytes copied host->device
     h2d_seconds: float = 0.0    # staging copy + transfer dispatch
-    stall_seconds: float = 0.0  # waiting for in-flight transfers on flush
+    stall_seconds: float = 0.0  # waiting on in-flight transfers (ring reclaim + flush)
     arena_capacity: int = 0     # bytes per host buffer
     buffers: int = 0
     rewinds: int = 0            # O(1) arena resets (one per staged batch)
     reallocs: int = 0           # capacity regrows (batch exceeded the hint)
-    retires: int = 0            # buffers replaced while their batch was live
 
     @property
     def h2d_bytes_per_second(self) -> float:
@@ -142,8 +157,7 @@ class FeedStats:
                 f"({self.h2d_bytes_per_second / 2**20:.0f}MiB/s) "
                 f"stall={self.stall_seconds:.2f}s "
                 f"arena={self.arena_capacity / 2**10:.0f}KiB x{self.buffers} "
-                f"rewinds={self.rewinds} reallocs={self.reallocs} "
-                f"retires={self.retires}")
+                f"rewinds={self.rewinds} reallocs={self.reallocs}")
 
 
 class FeedError(RuntimeError):
@@ -168,8 +182,8 @@ class DeviceFeeder:
     buffers:
         Staging arenas cycling round-robin. The default 3 matches the
         three-stage pipeline's steady state — one buffer being written,
-        one whose transfer is in flight, one held by the consumer — so
-        recycling needs no retires (see module docstring).
+        one whose transfer is in flight, one whose batch the consumer
+        holds — so reclaiming a ring slot rarely has to wait.
     device:
         Target device for ``jax.device_put`` (default backend if None).
     """
@@ -186,13 +200,34 @@ class DeviceFeeder:
         self.last_allocs: List[Allocation] = []  # placement of the last batch
         self._rewinds_prior = 0  # resets of pools replaced by a regrow
         self._host: List[Optional[np.ndarray]] = [None] * buffers
-        # weakrefs to the arrays staged from each buffer: liveness gate
-        self._inflight: List[List["weakref.ref"]] = [[] for _ in range(buffers)]
+        # Strong refs to the arrays staged from each buffer: the reuse gate.
+        # Cleared only after block_until_ready (claim/flush), never by the
+        # consumer dropping its references (jax dispatch is async — Python
+        # liveness says nothing about whether a transfer finished).
+        self._inflight: List[List[jax.Array]] = [[] for _ in range(buffers)]
+        # Transfers orphaned by an arena regrow, still awaited by flush().
+        self._orphans: List[jax.Array] = []
+        # Guards _inflight/_orphans/_host/_next against flush() racing stage().
+        self._lock = threading.Lock()
+        # None until the first transfer probes whether device_put zero-copies
+        # 128-byte-aligned host views on this backend (see _put).
+        self._zero_copy_put: Optional[bool] = None
         self._next = 0
         if rows_hint is not None:
             self._ensure_capacity(int(rows_hint))
 
     # ------------------------------------------------------------ arena mgmt
+    def _aligned_zeros(self, nbytes: int) -> np.ndarray:
+        """Zeroed host buffer whose base is layout-aligned. numpy gives no
+        alignment guarantee beyond ~16 bytes, and zero-copy eligibility in
+        ``jax.device_put`` depends on source alignment — forcing the base
+        makes the backend's copy-vs-alias behavior deterministic, so the
+        one-time probe in :meth:`_put` generalizes to every buffer."""
+        a = self.layout.align
+        raw = np.zeros(nbytes + a, dtype=np.uint8)
+        off = (-raw.__array_interface__["data"][0]) % a
+        return raw[off:off + nbytes]
+
     def _ensure_capacity(self, rows: int) -> None:
         need = self.layout.arena_bytes(rows)
         if self.pool is not None:
@@ -201,24 +236,32 @@ class DeviceFeeder:
             self.stats.reallocs += 1
             self._rewinds_prior += self.pool.n_resets
         self.pool = ArenaPool(need, align=self.layout.align)
-        # Old buffers are simply dropped: any staged array that aliases one
-        # keeps it alive until the consumer lets go.
-        self._host = [np.zeros(need, dtype=np.uint8)
-                      for _ in range(self.buffers)]
-        self._inflight = [[] for _ in range(self.buffers)]
-        self._next = 0
+        with self._lock:
+            # Transfers from the old buffers may still be in flight; jax
+            # keeps the source memory alive and we never rewrite a dropped
+            # buffer, but flush() must still be able to await the work.
+            self._orphans.extend(d for devs in self._inflight for d in devs)
+            self._host = [self._aligned_zeros(need)
+                          for _ in range(self.buffers)]
+            self._inflight = [[] for _ in range(self.buffers)]
+            self._next = 0
         self.stats.arena_capacity = need
 
     def _claim_buffer(self) -> int:
-        """Next ring slot; a buffer whose batch is still referenced is
-        retired (GC frees it once the consumer drops the arrays) and
-        replaced, so staged arrays are never overwritten."""
-        b = self._next
-        self._next = (self._next + 1) % self.buffers
-        if any(r() is not None for r in self._inflight[b]):
-            self.stats.retires += 1
-            self._host[b] = np.zeros(self.pool.capacity, dtype=np.uint8)
-        self._inflight[b] = []
+        """Next ring slot, gated on *use-completion*: every array staged
+        from the buffer is awaited (transfer confirmed complete) before the
+        buffer may be rewritten. Staged arrays never alias the arena (see
+        :meth:`_put`), so readiness is a sufficient gate — the consumer
+        dropping or keeping its batch references is irrelevant."""
+        with self._lock:
+            b = self._next
+            self._next = (self._next + 1) % self.buffers
+            pending, self._inflight[b] = self._inflight[b], []
+        if pending:
+            t0 = time.perf_counter()
+            for dev in pending:
+                dev.block_until_ready()
+            self.stats.stall_seconds += time.perf_counter() - t0
         return b
 
     # --------------------------------------------------------------- staging
@@ -247,6 +290,24 @@ class DeviceFeeder:
             f"batch is missing staged slot {spec.name!r} "
             f"(batch slots: {sorted(k for k in env if k.startswith('batch_'))})")
 
+    def _put(self, view: np.ndarray) -> jax.Array:
+        """Transfer one staged slot, guaranteeing the device array never
+        aliases the arena. The first transfer probes the backend: if
+        ``device_put`` copies (discrete-device H2D), arena views transfer
+        directly and :meth:`_claim_buffer`'s readiness gate covers the
+        async read; if it zero-copies, the source becomes a private copy
+        of the staged bytes, owned by the device array, so the arena is
+        free the moment ``stage`` returns. Host buffer bases are forced to
+        the layout alignment, so one probe decides for every buffer."""
+        if self._zero_copy_put is None:
+            dev = jax.device_put(view, self.device)
+            self._zero_copy_put = _aliases_host(dev, view)
+            if not self._zero_copy_put:
+                return dev
+        if self._zero_copy_put:
+            return jax.device_put(view.copy(), self.device)
+        return jax.device_put(view, self.device)
+
     def stage(self, env: Mapping[str, Any]) -> Dict[str, Any]:
         """Stage one batch: plan -> copy into arena -> async H2D of the views.
 
@@ -254,6 +315,21 @@ class DeviceFeeder:
         arrays (bitwise-equal values); all other slots pass through.
         """
         rows = self._rows(env)
+        # Validate the whole batch against the layout BEFORE claiming a
+        # buffer or issuing any transfer: a FeedError mid-batch must not
+        # leave half-issued transfers outside the reuse/flush gates.
+        arrs: List[np.ndarray] = []
+        for spec in self.layout.slots:
+            arr = self._slot_host(env, spec)
+            if arr.dtype != np.dtype(spec.dtype):
+                raise FeedError(
+                    f"slot {spec.name!r}: dtype {arr.dtype} != layout "
+                    f"{spec.dtype} (pass a custom FeedLayout)")
+            want = (rows,) if spec.rank1 else (rows, spec.width)
+            if arr.shape != want:
+                raise FeedError(
+                    f"slot {spec.name!r}: shape {arr.shape} != layout {want}")
+            arrs.append(arr)
         self._ensure_capacity(rows)
         assert self.pool is not None
 
@@ -266,26 +342,20 @@ class DeviceFeeder:
         buf = self._host[b]
         payload = 0
         devs: List[jax.Array] = []
-        for spec, alloc in zip(self.layout.slots, allocs):
-            arr = self._slot_host(env, spec)
-            if arr.dtype != np.dtype(spec.dtype):
-                raise FeedError(
-                    f"slot {spec.name!r}: dtype {arr.dtype} != layout "
-                    f"{spec.dtype} (pass a custom FeedLayout)")
-            want = (rows,) if spec.rank1 else (rows, spec.width)
-            if arr.shape != want:
-                raise FeedError(
-                    f"slot {spec.name!r}: shape {arr.shape} != layout {want}")
-            buf[alloc.offset:alloc.offset + arr.nbytes] = \
-                arr.reshape(-1).view(np.uint8)
-            # Aligned typed view of the arena bytes — the transfer source.
-            # The buffer is not rewritten while any of these arrays lives,
-            # so a zero-copying device_put is as safe as a copying one.
-            view = (buf[alloc.offset:alloc.offset + arr.nbytes]
-                    .view(spec.dtype).reshape(want))
-            devs.append(jax.device_put(view, self.device))
-            payload += arr.nbytes
-        self._inflight[b] = [weakref.ref(d) for d in devs]
+        try:
+            for spec, alloc, arr in zip(self.layout.slots, allocs, arrs):
+                buf[alloc.offset:alloc.offset + arr.nbytes] = \
+                    arr.reshape(-1).view(np.uint8)
+                # Aligned typed view of the arena bytes — the transfer source
+                # (or, on zero-copy backends, the bytes _put privately copies).
+                view = (buf[alloc.offset:alloc.offset + arr.nbytes]
+                        .view(spec.dtype).reshape(arr.shape))
+                devs.append(self._put(view))
+                payload += arr.nbytes
+        finally:
+            # Whatever was issued stays tracked, even if a transfer raised.
+            with self._lock:
+                self._inflight[b] = devs
 
         out = dict(env)
         out.update({spec.name: dev
@@ -297,11 +367,33 @@ class DeviceFeeder:
         return out
 
     def flush(self) -> None:
-        """Block until every still-live staged array's transfer completed."""
+        """Block until every staged transfer has completed.
+
+        The ring holds strong refs until claim/flush, so no transfer can
+        escape the wait — including ones whose consumer references already
+        died and ones orphaned by an arena regrow.
+        """
+        with self._lock:
+            pending = [d for devs in self._inflight for d in devs]
+            pending.extend(self._orphans)
+            self._inflight = [[] for _ in range(self.buffers)]
+            self._orphans = []
         t0 = time.perf_counter()
-        for refs in self._inflight:
-            for r in refs:
-                dev = r()
-                if dev is not None:
-                    dev.block_until_ready()
+        for dev in pending:
+            dev.block_until_ready()
         self.stats.stall_seconds += time.perf_counter() - t0
+
+
+def _aliases_host(dev: jax.Array, view: np.ndarray) -> bool:
+    """True unless ``dev`` provably does NOT share memory with ``view``.
+
+    Unknown means True: a needless private copy is safe, a missed alias is
+    silent batch corruption.
+    """
+    try:
+        dev.block_until_ready()
+        ptr = int(dev.unsafe_buffer_pointer())
+    except Exception:
+        return True
+    base = view.__array_interface__["data"][0]
+    return base <= ptr < base + max(view.nbytes, 1)

@@ -167,7 +167,7 @@ class PipelinedRunner:
         if self.device_feed is not None:
             # Bounded by the buffer ring: with one batch held by the train
             # loop and one being staged, at most buffers-2 more fit in the
-            # queue before a ring slot would have to be retired.
+            # queue before the feeder would block reclaiming a ring slot.
             feed_q: "queue.Queue" = queue.Queue(
                 maxsize=max(1, self.device_feed.buffers - 2))
             feeder = threading.Thread(
@@ -190,9 +190,8 @@ class PipelinedRunner:
                 state = self.train_step(state, item)
                 self.stats.train_seconds += time.perf_counter() - t0
                 self.stats.batches += 1
-                # Release the env before blocking on the next get: a staged
-                # batch held here would keep its feed-ring buffer live and
-                # force the feeder to retire it.
+                # Release the env before blocking on the next get so batch
+                # memory is reclaimed as soon as the device is done with it.
                 del item
         finally:
             stop.set()
@@ -205,9 +204,13 @@ class PipelinedRunner:
             for t in threads:
                 t.join(timeout=5.0)
             if self.device_feed is not None:
-                # Drain still-live transfers so wall time covers them and
-                # FeedStats.stall_seconds reflects the end-of-stream wait.
-                self.device_feed.flush()
+                # Drain in-flight transfers so wall time covers them and
+                # FeedStats.stall_seconds reflects the end-of-stream wait —
+                # but only once the h2d feeder is confirmed dead: join can
+                # time out with the thread still inside stage(), and flush
+                # must not race the ring it is draining.
+                if not any(t.is_alive() for t in threads):
+                    self.device_feed.flush()
                 self.stats.feed = self.device_feed.stats
             self.stats.wall_seconds = time.perf_counter() - t_start
             _capture_ingest(self.stats, batches)

@@ -12,9 +12,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.mempool import ALIGN
+from repro.core.mempool import ALIGN, align_up
 from repro.kernels.mempool_alloc.kernel import alloc_offsets
 from repro.kernels.mempool_alloc.ref import alloc_offsets_ref
+
+_INT32_MAX = np.iinfo(np.int32).max
 
 
 def plan_allocation(sizes: jax.Array, *, align: int = ALIGN, use_kernel: bool = True):
@@ -40,11 +42,23 @@ def plan_block(sizes: Sequence[int], *, align: int = ALIGN,
     compile time: takes ordinary Python sizes, runs the allocator kernel
     (or its reference), and returns ``(offsets int64[N], total)`` ready for
     host bookkeeping. Oracle-equivalent to
-    :meth:`repro.core.mempool.ArenaPool.alloc_block`.
+    :meth:`repro.core.mempool.ArenaPool.alloc_block` — including on inputs
+    the kernel's int32 offsets cannot represent: the pool raises there
+    (ValueError on negative sizes, int64 capacity check), so this path
+    raises too instead of silently wrapping at 2 GiB.
     """
-    arr = jnp.asarray(list(sizes), jnp.int32)
-    if arr.ndim != 1:
-        raise ValueError(f"sizes must be rank-1, got {arr.shape}")
+    reqs = np.asarray(list(sizes), dtype=np.int64)
+    if reqs.ndim != 1:
+        raise ValueError(f"sizes must be rank-1, got {reqs.shape}")
+    if (reqs < 0).any():
+        raise ValueError("negative allocation size")
+    head_bound = sum(int(align_up(s, align)) for s in reqs)
+    if head_bound > _INT32_MAX:
+        raise OverflowError(
+            f"allocation block needs {head_bound} aligned bytes, which "
+            f"overflows the kernel's int32 offsets (max {_INT32_MAX}); "
+            f"split the block or plan with ArenaPool.alloc_block (int64)")
+    arr = jnp.asarray(reqs, jnp.int32)
     offsets, head = plan_allocation(arr, align=align, use_kernel=use_kernel)
     total = int(np.asarray(head).reshape(-1)[0]) if arr.shape[0] else 0
     return np.asarray(offsets, dtype=np.int64), total

@@ -74,30 +74,31 @@ def fe_env_to_model_batch(env: Dict[str, Any], cfg) -> Dict[str, Any]:
     want a different width, so columns are tiled / re-hashed into the
     config's field vocabularies. Specs without a dense block (bst) or
     sequence block (dlrm-as-plain) degrade gracefully: missing blocks are
-    synthesized from the sparse fields.
+    synthesized from the sparse fields. Pure jnp so device arrays staged
+    by ``--device-feed on`` are adapted where they already live — a host
+    round-trip here would put a blocking D2H readback plus a second H2D
+    on the training critical path, inverting the flag's whole point.
     """
-    sparse = np.asarray(env["batch_sparse"], np.int64)
-    fields = [sparse[:, i % sparse.shape[1]] % cfg.vocab_sizes[i]
-              for i in range(cfg.n_sparse)]
+    sparse = jnp.asarray(env["batch_sparse"])
+    idx = np.arange(cfg.n_sparse) % sparse.shape[1]
+    vocab = np.asarray(cfg.vocab_sizes[:cfg.n_sparse], np.int32)
     batch: Dict[str, Any] = {
-        "sparse": jnp.asarray(np.stack(fields, axis=1).astype(np.int32)),
-        "label": jnp.asarray(np.asarray(env["batch_label"], np.float32)),
+        "sparse": (sparse[:, idx] % vocab).astype(jnp.int32),
+        "label": jnp.asarray(env["batch_label"]).astype(jnp.float32),
     }
     if cfg.n_dense:
         if "batch_dense" in env:
-            dense = np.asarray(env["batch_dense"], np.float32)
+            dense = jnp.asarray(env["batch_dense"]).astype(jnp.float32)
         else:  # spec emits no dense block: log-scaled sparse ids stand in
-            dense = np.log1p(sparse.astype(np.float32))
+            dense = jnp.log1p(sparse.astype(jnp.float32))
         reps = -(-cfg.n_dense // dense.shape[1])  # ceil
-        batch["dense"] = jnp.asarray(
-            np.tile(dense, (1, reps))[:, :cfg.n_dense])
+        batch["dense"] = jnp.tile(dense, (1, reps))[:, :cfg.n_dense]
     if cfg.kind == "bst":
-        seq = (np.asarray(env["batch_seq_ids"], np.int64)
+        seq = (jnp.asarray(env["batch_seq_ids"])
                if "batch_seq_ids" in env else sparse)
         reps = -(-cfg.seq_len // seq.shape[1])
-        batch["seq"] = jnp.asarray(
-            (np.tile(seq, (1, reps))[:, :cfg.seq_len]
-             % cfg.vocab_sizes[0]).astype(np.int32))
+        batch["seq"] = (jnp.tile(seq, (1, reps))[:, :cfg.seq_len]
+                        % cfg.vocab_sizes[0]).astype(jnp.int32)
     return batch
 
 

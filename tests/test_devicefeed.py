@@ -3,7 +3,7 @@ bitwise staging, runner integration, and runner equivalence (property)."""
 
 import numpy as np
 import pytest
-from conftest import pipeline_threads_gone
+from conftest import pipeline_threads_gone, recording_step
 
 from repro.core import (
     ALIGN,
@@ -62,6 +62,27 @@ def test_placement_plan_oracle_agreement(name):
         [a.offset for a in feeder.last_allocs], off_jnp)
 
 
+def test_plan_rejects_int32_overflow():
+    """Both oracle paths must refuse what ArenaPool's int64 bookkeeping
+    would accept but the kernel's int32 offsets would silently wrap."""
+    from repro.core.devicefeed import FeedLayout, SlotSpec
+    from repro.kernels.mempool_alloc.ops import plan_block
+
+    with pytest.raises(OverflowError, match="int32"):
+        plan_block([2**31], align=ALIGN)
+    with pytest.raises(OverflowError, match="int32"):  # per-size ok, sum not
+        plan_block([2**30, 2**30, 2**30], align=ALIGN)
+    with pytest.raises(ValueError, match="negative"):
+        plan_block([4, -1], align=ALIGN)
+
+    fat = FeedLayout(slots=(SlotSpec("batch_huge", width=2**29,
+                                     dtype="float32"),))
+    with pytest.raises(OverflowError, match="int32"):
+        fat.plan(2)                    # jnp prefix-sum path
+    with pytest.raises(OverflowError, match="int32"):
+        fat.plan(2, use_kernel=True)   # Pallas kernel path
+
+
 def test_split_sparse_fields_layout_preserves_bytes():
     """Per-field staging (one rank-1 id vector per sparse field) keeps the
     total staged bytes identical to the packed batch_sparse layout."""
@@ -98,14 +119,11 @@ def test_double_buffer_rewind_reuses_offsets_bitwise():
     host_ids = [id(h) for h in feeder._host]
     offsets = []
     for i in range(4):
-        # each staged batch is dropped before the next stage() — the steady
-        # pipeline state — so ring slots recycle without retires
         feeder.stage(plan.run(gen_views(32, seed=10 + i)))
         offsets.append([a.offset for a in feeder.last_allocs])
     assert offsets[0] == offsets[1] == offsets[2] == offsets[3]
     assert feeder.pool.n_resets == 4 == feeder.stats.rewinds
     assert feeder.stats.reallocs == 0
-    assert feeder.stats.retires == 0
     assert [id(h) for h in feeder._host] == host_ids  # O(1) rewind, no
     assert feeder.stats.batches == 4                  # fresh buffers
     assert feeder.stats.bytes_staged == 4 * plan.feed_layout().bytes_per_batch(32)
@@ -146,11 +164,14 @@ def test_staged_slots_bit_identical(name):
 
 
 def test_arena_reuse_never_corrupts_staged_batches():
-    """Regression: staged device arrays must be *copies* of the arena, not
-    aliases — with buffers=1 every stage() rewrites the same host buffer,
-    so any aliasing shows up as earlier batches mutating."""
+    """Regression: with buffers=1 every stage() rewrites the same host
+    buffer, so a staged array that aliased the arena would show up as
+    earlier batches mutating. Reuse must wait for transfer completion and
+    transfer sources must never point into the arena — even while the
+    consumer keeps every batch alive."""
     plan = featureplan.compile(get_spec("ads_ctr"))
     feeder = DeviceFeeder(plan.feed_layout(), rows_hint=32, buffers=1)
+    host_ids = [id(h) for h in feeder._host]
     staged, snapshots = [], []
     for i in range(3):
         out = feeder.stage(plan.run(gen_views(32, seed=30 + i)))
@@ -161,8 +182,56 @@ def test_arena_reuse_never_corrupts_staged_batches():
     for kept, snap in zip(staged, snapshots):
         for k in snap:
             np.testing.assert_array_equal(np.asarray(kept[k]), snap[k])
-    # holding every batch alive forced the single-slot ring to retire
-    assert feeder.stats.retires == 2
+    # reuse-in-place even under consumer pressure: allocate-once preserved
+    assert [id(h) for h in feeder._host] == host_ids
+
+
+@pytest.mark.parametrize("name", PRESETS)
+def test_staged_arrays_never_alias_arena(name):
+    """Regression for the async-dispatch corruption: jax's zero-copy
+    device_put would hand back arrays whose storage IS the arena bytes,
+    which the ring later rewrites while a transfer or train step may still
+    be reading them. Every staged array must live outside the host ring."""
+    plan = featureplan.compile(get_spec(name))
+    feeder = DeviceFeeder(plan.feed_layout(), rows_hint=24)
+    staged = feeder.stage(plan.run(gen_views(24, seed=9)))
+    ranges = [(h.__array_interface__["data"][0], h.nbytes)
+              for h in feeder._host]
+    for k in plan.output_slots:
+        dev = staged[k]
+        try:
+            ptr = int(dev.unsafe_buffer_pointer())
+        except Exception:
+            pytest.skip("backend does not expose buffer pointers")
+        assert not any(base <= ptr < base + n for base, n in ranges), \
+            f"slot {k} aliases the staging arena"
+
+
+def test_reuse_gate_holds_transfers_until_claim_or_flush():
+    """Regression for the weakref liveness gate: the consumer dropping its
+    batch references must NOT release the ring — transfers are tracked by
+    strong refs until awaited, so flush() can always account for them."""
+    plan = featureplan.compile(get_spec("ads_ctr"))
+    feeder = DeviceFeeder(plan.feed_layout(), rows_hint=16, buffers=2)
+    feeder.stage(plan.run(gen_views(16, seed=1)))  # output dropped at once
+    assert any(feeder._inflight)  # still gated despite dead consumer refs
+    feeder.flush()
+    assert not any(feeder._inflight) and not feeder._orphans
+    # a regrow orphans in-flight work instead of forgetting it
+    feeder.stage(plan.run(gen_views(16, seed=2)))
+    feeder.stage(plan.run(gen_views(64, seed=3)))
+    assert feeder.stats.reallocs == 1
+    assert feeder._orphans  # pre-regrow transfers still awaitable
+    feeder.flush()
+    assert not feeder._orphans
+
+
+def test_host_buffers_are_layout_aligned():
+    """Forced base alignment is what makes the zero-copy probe decisive."""
+    plan = featureplan.compile(get_spec("dlrm"))
+    feeder = DeviceFeeder(plan.feed_layout(), rows_hint=32)
+    for h in feeder._host:
+        assert h.__array_interface__["data"][0] % feeder.layout.align == 0
 
 
 def test_stage_rejects_layout_violations():
@@ -182,12 +251,6 @@ def test_stage_rejects_layout_violations():
 
 
 # ------------------------------------------------------- runner integration
-def _recording_step(record):
-    def step(state, env):
-        record.append({k: np.asarray(v) for k, v in env.items()
-                       if k.startswith("batch_")})
-        return {"batches": state["batches"] + 1}
-    return step
 
 
 def test_runner_with_feed_matches_no_feed_bitwise():
@@ -195,10 +258,10 @@ def test_runner_with_feed_matches_no_feed_bitwise():
     batches = [gen_views(40, seed=60 + i) for i in range(4)]
 
     seen_off, seen_on = [], []
-    off = PipelinedRunner(plan.layers, _recording_step(seen_off), prefetch=2)
+    off = PipelinedRunner(plan.layers, recording_step(seen_off), prefetch=2)
     off.run({"batches": 0}, [dict(b) for b in batches])
     feeder = DeviceFeeder(plan.feed_layout(), rows_hint=40)
-    on = PipelinedRunner(plan.layers, _recording_step(seen_on), prefetch=2,
+    on = PipelinedRunner(plan.layers, recording_step(seen_on), prefetch=2,
                          device_feed=feeder)
     on.run({"batches": 0}, [dict(b) for b in batches])
 
@@ -222,7 +285,7 @@ def test_fallback_none_is_bit_identical_to_direct_run():
     expect = [plan.outputs(plan.run(dict(b))) for b in batches]
 
     seen = []
-    runner = PipelinedRunner(plan.layers, _recording_step(seen), prefetch=2)
+    runner = PipelinedRunner(plan.layers, recording_step(seen), prefetch=2)
     runner.run({"batches": 0}, [dict(b) for b in batches])
     assert len(seen) == 3
     for got, want in zip(seen, expect):
@@ -238,7 +301,7 @@ def test_split_layout_stages_packed_fe_output_in_runner():
     feeder = DeviceFeeder(plan.feed_layout(split_sparse_fields=True),
                           rows_hint=24)
     seen = []
-    runner = PipelinedRunner(plan.layers, _recording_step(seen), prefetch=2,
+    runner = PipelinedRunner(plan.layers, recording_step(seen), prefetch=2,
                              device_feed=feeder)
     batches = [gen_views(24, seed=70 + i) for i in range(2)]
     runner.run({"batches": 0}, [dict(b) for b in batches])

@@ -5,6 +5,7 @@ outputs — previously only the legacy ads_ctr path asserted this."""
 
 import numpy as np
 import pytest
+from conftest import recording_step
 
 hypothesis = pytest.importorskip("hypothesis")
 st = pytest.importorskip("hypothesis.strategies")
@@ -61,14 +62,6 @@ def _small_specs(draw):
         outputs=tuple(outputs))
 
 
-def _recording_step(record):
-    def step(state, env):
-        record.append({k: np.asarray(v) for k, v in env.items()
-                       if k.startswith("batch_")})
-        return {"batches": state["batches"] + 1}
-    return step
-
-
 @hypothesis.settings(
     max_examples=8, deadline=None,
     suppress_health_check=[hypothesis.HealthCheck.too_slow,
@@ -94,7 +87,7 @@ def test_runners_equivalent_on_random_specs(spec, rows, n_batches, seed,
     ):
         runner = make()
         seen = []
-        runner.train_step = _recording_step(seen)
+        runner.train_step = recording_step(seen)
         state = runner.run({"batches": 0}, [dict(b) for b in batches])
         results.append((state, seen))
 
