@@ -45,36 +45,54 @@ def empty_kernel_sweep() -> List[Dict]:
 
 
 def fe_fused_vs_unfused(n_iters: int = 20) -> List[Dict]:
-    layers = featureplan.compile(get_spec("ads_ctr")).layers
+    from repro.core import compile_layers
+
+    plan = featureplan.compile(get_spec("ads_ctr"))
+    coalesced = plan.layers                # super-layer coalescing (default)
+    per_layer = compile_layers(plan.schedule, coalesce=False)
     views = gen_views(4096, seed=0)
 
-    # warm both paths
-    run_layers(layers, dict(views))
-    run_unfused(layers, dict(views))
+    # warm all paths
+    run_layers(coalesced, dict(views))
+    run_layers(per_layer, dict(views))
+    run_unfused(per_layer, dict(views))
+
+    s_coal = ExecutionStats()
+    t0 = time.perf_counter()
+    for _ in range(n_iters):
+        run_layers(coalesced, dict(views), stats=s_coal)
+    t_coal = time.perf_counter() - t0
 
     s_fused = ExecutionStats()
     t0 = time.perf_counter()
     for _ in range(n_iters):
-        run_layers(layers, dict(views), stats=s_fused)
+        run_layers(per_layer, dict(views), stats=s_fused)
     t_fused = time.perf_counter() - t0
 
     s_unf = ExecutionStats()
     t0 = time.perf_counter()
     for _ in range(n_iters):
-        run_unfused(layers, dict(views), stats=s_unf)
+        run_unfused(per_layer, dict(views), stats=s_unf)
     t_unf = time.perf_counter() - t0
 
+    d_coal = s_coal.n_device_dispatches // n_iters
     d_fused = s_fused.n_device_dispatches // n_iters
     d_unf = s_unf.n_device_dispatches // n_iters
+    barriers = plan.schedule.n_host_barriers
     return [
+        {"name": "fe_superlayer_coalesced", "us_per_call": t_coal / n_iters * 1e6,
+         "derived": f"dispatches/batch={d_coal} "
+                    f"(= host_barriers({barriers})+1) "
+                    f"device_s={s_coal.device_seconds:.3f}"},
         {"name": "fe_metakernel_fused", "us_per_call": t_fused / n_iters * 1e6,
          "derived": f"dispatches/batch={d_fused} device_s={s_fused.device_seconds:.3f}"},
         {"name": "fe_per_op_unfused", "us_per_call": t_unf / n_iters * 1e6,
          "derived": f"dispatches/batch={d_unf} device_s={s_unf.device_seconds:.3f}"},
         {"name": "fe_dispatch_reduction", "us_per_call": 0.0,
-         "derived": f"{d_unf}->{d_fused} dispatches "
-                    f"({d_unf/max(d_fused,1):.1f}x fewer), "
-                    f"device-time ratio={s_unf.device_seconds/max(s_fused.device_seconds,1e-9):.2f}x"},
+         "derived": f"{d_unf}->{d_fused}->{d_coal} dispatches "
+                    f"(per-op -> per-layer -> coalesced; "
+                    f"{d_unf/max(d_coal,1):.1f}x fewer), "
+                    f"device-time ratio={s_unf.device_seconds/max(s_coal.device_seconds,1e-9):.2f}x"},
     ]
 
 

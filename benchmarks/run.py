@@ -5,6 +5,12 @@ Prints ``name,us_per_call,derived`` CSV (one row per measurement).
   PYTHONPATH=src python -m benchmarks.run             # all
   PYTHONPATH=src python -m benchmarks.run --only e2e  # substring filter
   PYTHONPATH=src python -m benchmarks.run --list      # suite names only
+  PYTHONPATH=src python -m benchmarks.run --only pipeline \
+      --json BENCH_pipeline.json                      # machine-readable dump
+
+``--json PATH`` additionally writes every selected suite's rows (plus
+failure markers) as JSON — the committed ``BENCH_*.json`` baselines CI
+and future PRs compare against.
 
 Exits nonzero if any selected suite fails, so CI can gate on the run.
 """
@@ -12,6 +18,8 @@ Exits nonzero if any selected suite fails, so CI can gate on the run.
 from __future__ import annotations
 
 import argparse
+import json
+import platform
 import sys
 import traceback
 
@@ -21,11 +29,14 @@ def main() -> None:
     ap.add_argument("--only", default="", help="substring filter on suite name")
     ap.add_argument("--list", action="store_true",
                     help="print suite names and exit (no benchmarks run)")
+    ap.add_argument("--json", default="", metavar="PATH",
+                    help="also write the selected suites' rows to PATH "
+                         "(BENCH_<suite>.json baseline format)")
     args = ap.parse_args()
 
     from benchmarks import bench_devicefeed, bench_end_to_end, \
         bench_feature_extraction, bench_hierarchy, bench_ingest, \
-        bench_launch_overhead, roofline
+        bench_launch_overhead, bench_pipeline, roofline
 
     suites = [
         ("launch_overhead(TableI)", bench_launch_overhead.run),
@@ -33,6 +44,7 @@ def main() -> None:
         ("end_to_end(TableII)", bench_end_to_end.run),
         ("ingest(shard streaming)", bench_ingest.run),
         ("devicefeed(H2D overlap)", bench_devicefeed.run),
+        ("pipeline(hot path)", bench_pipeline.run),
         ("hierarchy(PS tiers)", bench_hierarchy.run),
         ("roofline", roofline.run),
     ]
@@ -42,17 +54,31 @@ def main() -> None:
         return
     print("name,us_per_call,derived")
     failed = []
+    report = {"suites": {}, "python": platform.python_version(),
+              "machine": platform.machine()}
     for name, fn in suites:
         if args.only and args.only not in name:
             continue
         try:
-            for row in fn():
+            rows = list(fn())
+            for row in rows:
                 derived = str(row.get("derived", "")).replace(",", ";")
                 print(f"{row['name']},{row['us_per_call']:.2f},{derived}")
+            report["suites"][name] = {
+                "rows": [{"name": r["name"],
+                          "us_per_call": round(float(r["us_per_call"]), 2),
+                          "derived": str(r.get("derived", ""))}
+                         for r in rows]}
         except Exception:
             failed.append(name)
             traceback.print_exc()
             print(f"{name},NaN,SUITE FAILED")
+            report["suites"][name] = {"failed": True}
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=2)
+            f.write("\n")
+        print(f"wrote {args.json}", file=sys.stderr)
     if failed:
         print(f"FAILED suites: {', '.join(failed)}", file=sys.stderr)
         sys.exit(1)

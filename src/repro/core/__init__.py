@@ -7,7 +7,9 @@ from repro.core.scheduler import (
     Layer,
     PlacedOp,
     Schedule,
+    SuperLayer,
     build_schedule,
+    coalesce_layers,
     validate_schedule,
 )
 from repro.core.metakernel import (
@@ -18,12 +20,20 @@ from repro.core.metakernel import (
     run_unfused,
 )
 from repro.core.mempool import ALIGN, Allocation, ArenaPool, align_up, plan_offsets, required_capacity
-from repro.core.devicefeed import DeviceFeeder, FeedError, FeedLayout, FeedStats, SlotSpec
+from repro.core.devicefeed import (
+    ArenaClaim,
+    DeviceFeeder,
+    FeedError,
+    FeedLayout,
+    FeedStats,
+    SlotSpec,
+)
 from repro.core.pipeline import PipelinedRunner, PipelineStats, StagedRunner
 
 __all__ = [
     "ALIGN",
     "Allocation",
+    "ArenaClaim",
     "ArenaPool",
     "Device",
     "DeviceFeeder",
@@ -43,8 +53,10 @@ __all__ = [
     "PlacedOp",
     "Schedule",
     "StagedRunner",
+    "SuperLayer",
     "align_up",
     "build_schedule",
+    "coalesce_layers",
     "compile_layers",
     "plan_offsets",
     "required_capacity",

@@ -145,6 +145,9 @@ class FeedStats:
     buffers: int = 0
     rewinds: int = 0            # O(1) arena resets (one per staged batch)
     reallocs: int = 0           # capacity regrows (batch exceeded the hint)
+    copies_elided: int = 0      # slots staged without an env->arena memcpy
+    #   (zero-copy feed: the producer wrote the slot straight into a
+    #   claimed arena view, so stage() had nothing to copy)
 
     @property
     def h2d_bytes_per_second(self) -> float:
@@ -157,11 +160,29 @@ class FeedStats:
                 f"({self.h2d_bytes_per_second / 2**20:.0f}MiB/s) "
                 f"stall={self.stall_seconds:.2f}s "
                 f"arena={self.arena_capacity / 2**10:.0f}KiB x{self.buffers} "
-                f"rewinds={self.rewinds} reallocs={self.reallocs}")
+                f"rewinds={self.rewinds} reallocs={self.reallocs} "
+                f"elided={self.copies_elided}")
 
 
 class FeedError(RuntimeError):
     """A batch violated the feed layout's static shape contract."""
+
+
+@dataclasses.dataclass
+class ArenaClaim:
+    """One batch's claimed ring slot: typed arena views awaiting the payload.
+
+    Returned by :meth:`DeviceFeeder.claim_views`; producers write each
+    slot's rows directly into ``views[name]`` (zero-copy feed), then hand
+    the claim back to :meth:`DeviceFeeder.stage`, which issues the
+    transfers without re-copying arena-resident slots.
+    """
+
+    buffer_index: int
+    rows: int
+    views: Dict[str, np.ndarray]
+    allocs: List[Allocation]
+    epoch: int  # arena generation; a regrow orphans older claims' transfers
 
 
 class DeviceFeeder:
@@ -186,15 +207,24 @@ class DeviceFeeder:
         holds — so reclaiming a ring slot rarely has to wait.
     device:
         Target device for ``jax.device_put`` (default backend if None).
+    binding:
+        Optional output binding (``FeaturePlan.arena_binding().binding``):
+        a producer-side assembler with ``ready(env)`` / ``rows_of(env)`` /
+        ``write(env, views)``. When set and a batch arrives in pre-assembly
+        form, :meth:`stage` claims ring views and has the binding write the
+        ``batch_*`` outputs **directly into the arena** — the zero-copy
+        feed: no fresh output arrays, no env->arena memcpy
+        (``FeedStats.copies_elided`` counts the slots that skipped it).
     """
 
     def __init__(self, layout: FeedLayout, *, rows_hint: Optional[int] = None,
-                 buffers: int = 3, device=None) -> None:
+                 buffers: int = 3, device=None, binding=None) -> None:
         if buffers < 1:
             raise ValueError(f"buffers must be >= 1, got {buffers}")
         self.layout = layout
         self.buffers = buffers
         self.device = device
+        self.binding = binding
         self.stats = FeedStats(buffers=buffers)
         self.pool: Optional[ArenaPool] = None
         self.last_allocs: List[Allocation] = []  # placement of the last batch
@@ -213,6 +243,10 @@ class DeviceFeeder:
         # 128-byte-aligned host views on this backend (see _put).
         self._zero_copy_put: Optional[bool] = None
         self._next = 0
+        # Arena generation: bumped by every regrow so transfers issued from
+        # a pre-regrow ArenaClaim are tracked as orphans, not misfiled
+        # under a fresh buffer's index.
+        self._epoch = 0
         if rows_hint is not None:
             self._ensure_capacity(int(rows_hint))
 
@@ -245,6 +279,7 @@ class DeviceFeeder:
                           for _ in range(self.buffers)]
             self._inflight = [[] for _ in range(self.buffers)]
             self._next = 0
+            self._epoch += 1
         self.stats.arena_capacity = need
 
     def _claim_buffer(self) -> int:
@@ -308,18 +343,78 @@ class DeviceFeeder:
             return jax.device_put(view.copy(), self.device)
         return jax.device_put(view, self.device)
 
-    def stage(self, env: Mapping[str, Any]) -> Dict[str, Any]:
-        """Stage one batch: plan -> copy into arena -> async H2D of the views.
+    def claim_views(self, rows: int) -> ArenaClaim:
+        """Claim the next ring slot and return typed views of its arena.
+
+        This is the zero-copy feed's producer contract: Alg. 1 runs here
+        (O(1) rewind + one block allocation), and the returned
+        :class:`ArenaClaim` holds one aligned typed view per layout slot.
+        The producer writes each batch output straight into its view —
+        never building a fresh array — then hands the claim to
+        :meth:`stage`, which skips the env->arena memcpy for every slot
+        that is already arena-resident.
+
+        Claiming blocks until every transfer previously issued from the
+        slot's buffer has completed (the use-completion gate), exactly as
+        the copying path does.
+        """
+        rows = int(rows)
+        if rows < 0:
+            raise FeedError(f"rows must be >= 0, got {rows}")
+        self._ensure_capacity(rows)
+        assert self.pool is not None
+        b = self._claim_buffer()
+        # Alg. 1 per meta-batch: O(1) rewind, then one block allocation.
+        self.pool.reset()
+        allocs = self.pool.alloc_block(self.layout.sizes(rows))
+        self.last_allocs = allocs
+        buf = self._host[b]
+        views: Dict[str, np.ndarray] = {}
+        for spec, alloc in zip(self.layout.slots, allocs):
+            shape = (rows,) if spec.rank1 else (rows, spec.width)
+            views[spec.name] = (buf[alloc.offset:alloc.offset + spec.nbytes(rows)]
+                                .view(spec.dtype).reshape(shape))
+        self.stats.rewinds = self._rewinds_prior + self.pool.n_resets
+        with self._lock:
+            epoch = self._epoch
+        return ArenaClaim(buffer_index=b, rows=rows, views=views,
+                          allocs=allocs, epoch=epoch)
+
+    def stage(self, env: Mapping[str, Any], *,
+              claim: Optional[ArenaClaim] = None) -> Dict[str, Any]:
+        """Stage one batch: plan -> (copy into arena) -> async H2D of the views.
+
+        Three entry forms, one transfer tail:
+
+        * plain ``stage(env)`` — the fallback copy path: every layout slot
+          is validated, memcpy'd into a freshly claimed arena buffer, and
+          transferred;
+        * ``stage(env, claim=...)`` — the producer already wrote some/all
+          slots into ``claim``'s views (:meth:`claim_views`); arena-resident
+          slots skip the memcpy (``FeedStats.copies_elided``);
+        * with a ``binding`` attached and a pre-assembly batch — the
+          binding assembles the ``batch_*`` outputs directly into claimed
+          views (zero-copy feed), then everything transfers.
 
         Returns the environment with the layout's slots replaced by device
         arrays (bitwise-equal values); all other slots pass through.
         """
-        rows = self._rows(env)
+        if claim is None and self.binding is not None \
+                and self.binding.ready(env):
+            return self._stage_direct(env)
+        rows = claim.rows if claim is not None else self._rows(env)
         # Validate the whole batch against the layout BEFORE claiming a
         # buffer or issuing any transfer: a FeedError mid-batch must not
         # leave half-issued transfers outside the reuse/flush gates.
-        arrs: List[np.ndarray] = []
+        arrs: List[Optional[np.ndarray]] = []
         for spec in self.layout.slots:
+            if claim is not None:
+                view = claim.views[spec.name]
+                got = env.get(spec.name)
+                if got is not None and isinstance(got, np.ndarray) \
+                        and np.shares_memory(got, view):
+                    arrs.append(None)  # already arena-resident: no memcpy
+                    continue
             arr = self._slot_host(env, spec)
             if arr.dtype != np.dtype(spec.dtype):
                 raise FeedError(
@@ -330,32 +425,45 @@ class DeviceFeeder:
                 raise FeedError(
                     f"slot {spec.name!r}: shape {arr.shape} != layout {want}")
             arrs.append(arr)
-        self._ensure_capacity(rows)
-        assert self.pool is not None
-
-        b = self._claim_buffer()
+        if claim is None:
+            claim = self.claim_views(rows)
         t0 = time.perf_counter()
-        # Alg. 1 per meta-batch: O(1) rewind, then one block allocation.
-        self.pool.reset()
-        allocs = self.pool.alloc_block(self.layout.sizes(rows))
-        self.last_allocs = allocs
-        buf = self._host[b]
+        for spec, arr in zip(self.layout.slots, arrs):
+            if arr is None:
+                self.stats.copies_elided += 1
+            else:
+                np.copyto(claim.views[spec.name], arr, casting="no")
+        return self._transfer(env, claim, t0)
+
+    def _stage_direct(self, env: Mapping[str, Any]) -> Dict[str, Any]:
+        """Zero-copy feed: assemble ``batch_*`` outputs straight into the
+        arena via the attached binding — the env->arena memcpy (and the
+        fresh output arrays the copy path reads from) never exist."""
+        claim = self.claim_views(self.binding.rows_of(env))
+        t0 = time.perf_counter()
+        self.binding.write(env, claim.views)
+        self.stats.copies_elided += len(self.layout.slots)
+        return self._transfer(env, claim, t0)
+
+    def _transfer(self, env: Mapping[str, Any], claim: ArenaClaim,
+                  t0: float) -> Dict[str, Any]:
+        """Issue the async H2D transfers for a claimed, filled arena slot."""
         payload = 0
         devs: List[jax.Array] = []
         try:
-            for spec, alloc, arr in zip(self.layout.slots, allocs, arrs):
-                buf[alloc.offset:alloc.offset + arr.nbytes] = \
-                    arr.reshape(-1).view(np.uint8)
-                # Aligned typed view of the arena bytes — the transfer source
-                # (or, on zero-copy backends, the bytes _put privately copies).
-                view = (buf[alloc.offset:alloc.offset + arr.nbytes]
-                        .view(spec.dtype).reshape(arr.shape))
-                devs.append(self._put(view))
-                payload += arr.nbytes
+            for spec in self.layout.slots:
+                devs.append(self._put(claim.views[spec.name]))
+                payload += spec.nbytes(claim.rows)
         finally:
             # Whatever was issued stays tracked, even if a transfer raised.
+            # Transfers from a pre-regrow claim can't be filed under the
+            # fresh ring (indices refer to new buffers): they join the
+            # orphans flush() awaits.
             with self._lock:
-                self._inflight[b] = devs
+                if claim.epoch == self._epoch:
+                    self._inflight[claim.buffer_index] = devs
+                else:
+                    self._orphans.extend(devs)
 
         out = dict(env)
         out.update({spec.name: dev
@@ -363,7 +471,6 @@ class DeviceFeeder:
         self.stats.h2d_seconds += time.perf_counter() - t0
         self.stats.batches += 1
         self.stats.bytes_staged += payload
-        self.stats.rewinds = self._rewinds_prior + self.pool.n_resets
         return out
 
     def flush(self) -> None:

@@ -12,6 +12,13 @@ XLA/TPU analogue implemented here:
   per layer. HOST operators run as Python callables before the device
   dispatch, and their outputs are moved with an explicit ``device_put``
   (the paper's H2D copy).
+* by default, compilation goes one step further than the paper's per-layer
+  fusion: maximal runs of consecutive layers with no interleaving host ops
+  (``Schedule.superlayers``) are traced as a **single** jit computation, so
+  per batch the device pays ``n_host_barriers + 1`` dispatches instead of
+  one per layer — a dispatch is only *required* where host code interrupts
+  device work. ``compile_layers(..., coalesce=False)`` keeps the per-layer
+  structure (the Fig. 4(c) baseline the coalescing benchmark compares to).
 * compilation happens once, ahead of training (`compile_layers`), because the
   schedule is fixed — the paper's "runtime-compilation manner ... only need to
   create this meta-kernel for each layer once as a pre-processing".
@@ -37,7 +44,7 @@ from repro.core.scheduler import Layer, PlacedOp, Schedule
 
 @dataclasses.dataclass
 class LayerExecutable:
-    """One layer of the schedule, ready to run with a single device dispatch."""
+    """One (super-)layer of the schedule, ready to run with one dispatch."""
 
     index: int
     host_ops: Tuple[PlacedOp, ...]
@@ -45,53 +52,89 @@ class LayerExecutable:
     fused_fn: Optional[Callable[..., Dict[str, Any]]]  # jitted; None if no device ops
     # slots the fused fn consumes from the environment, in order
     device_input_slots: Tuple[str, ...] = ()
+    # schedule layers folded into this executable (coalescing accounting)
+    layer_indices: Tuple[int, ...] = ()
+    # per-op jitted wrappers, built once at compile time so the unfused
+    # baseline (run_unfused) measures dispatch overhead, not retraces
+    op_jits: Tuple[Callable[..., Dict[str, Any]], ...] = ()
 
     @property
     def n_dispatches(self) -> int:
         return 1 if self.fused_fn is not None else 0
 
+    @property
+    def n_source_layers(self) -> int:
+        return len(self.layer_indices) if self.layer_indices else 1
+
 
 def _build_fused_fn(device_ops: Tuple[PlacedOp, ...]) -> Tuple[Callable, Tuple[str, ...]]:
-    """Trace all device ops of a layer as one function env->outputs.
+    """Trace all device ops of a (super-)layer as one function env->outputs.
 
-    Ops within a layer are independent (scheduler invariant), so order inside
-    the fused body is irrelevant; XLA fuses/parallelizes freely.
+    Ops are traced in schedule order, which is dependency-safe: within one
+    layer ops are independent (scheduler invariant), and across coalesced
+    layers every producer precedes its consumers. Slots produced inside the
+    body are fed forward through the trace instead of the environment, so
+    the fused computation's only inputs are externally-produced slots.
     """
     input_slots: List[str] = []
     seen = set()
+    produced = set()
     for placed in device_ops:
         for slot in placed.op.inputs:
-            if slot not in seen:
+            if slot not in seen and slot not in produced:
                 seen.add(slot)
                 input_slots.append(slot)
+        produced.update(placed.op.outputs)
     input_slots_t = tuple(input_slots)
 
     def fused(env: Dict[str, Any]) -> Dict[str, Any]:
+        scope = dict(env)
         out: Dict[str, Any] = {}
         for placed in device_ops:
-            kwargs = {s: env[s] for s in placed.op.inputs}
+            kwargs = {s: scope[s] for s in placed.op.inputs}
             res = placed.op.fn(**kwargs)
             for slot in placed.op.outputs:
+                scope[slot] = res[slot]
                 out[slot] = res[slot]
         return out
 
     return jax.jit(fused), input_slots_t
 
 
-def compile_layers(schedule: Schedule) -> List[LayerExecutable]:
-    """Ahead-of-time build of every layer's fused executable."""
+def compile_layers(schedule: Schedule, *, coalesce: bool = True,
+                   drop: Tuple[str, ...] = ()) -> List[LayerExecutable]:
+    """Ahead-of-time build of every (super-)layer's fused executable.
+
+    ``coalesce=True`` (default) groups maximal host-barrier-free layer runs
+    into one executable each (``Schedule.superlayers``): dispatches per
+    batch drop from one per device layer to ``n_host_barriers + 1``.
+    ``coalesce=False`` keeps the paper's per-layer fusion for comparison.
+    ``drop`` removes named operators from the build (used by the
+    direct-to-arena staging path, which replaces the device ``final_batch``
+    assembly with a host binding that writes straight into the arena).
+    """
+    groups = (schedule.superlayers if coalesce
+              else tuple((layer,) for layer in schedule.layers))
     layers: List[LayerExecutable] = []
-    for layer in schedule.layers:
+    dropped = set(drop)
+    for i, group in enumerate(groups):
+        members = group.layers if coalesce else group
+        host_ops = tuple(p for layer in members for p in layer.host_ops
+                         if p.op.name not in dropped)
+        device_ops = tuple(p for layer in members for p in layer.device_ops
+                           if p.op.name not in dropped)
         fused_fn, slots = (None, ())
-        if layer.device_ops:
-            fused_fn, slots = _build_fused_fn(layer.device_ops)
+        if device_ops:
+            fused_fn, slots = _build_fused_fn(device_ops)
         layers.append(
             LayerExecutable(
-                index=layer.index,
-                host_ops=layer.host_ops,
-                device_ops=layer.device_ops,
+                index=i,
+                host_ops=host_ops,
+                device_ops=device_ops,
                 fused_fn=fused_fn,
                 device_input_slots=slots,
+                layer_indices=tuple(layer.index for layer in members),
+                op_jits=tuple(jax.jit(p.op.fn) for p in device_ops),
             )
         )
     return layers
@@ -99,11 +142,17 @@ def compile_layers(schedule: Schedule) -> List[LayerExecutable]:
 
 @dataclasses.dataclass
 class ExecutionStats:
-    n_layers: int = 0
+    n_layers: int = 0             # executables run (super-layers when coalesced)
+    n_source_layers: int = 0      # schedule layers they cover (coalescing gain)
     n_device_dispatches: int = 0
     n_host_ops: int = 0
     host_seconds: float = 0.0
     device_seconds: float = 0.0
+
+    @property
+    def n_layers_coalesced(self) -> int:
+        """Schedule layers folded into an already-dispatched super-layer."""
+        return self.n_source_layers - self.n_layers
 
 
 def run_layers(
@@ -138,6 +187,7 @@ def run_layers(
         t2 = time.perf_counter()
         if stats is not None:
             stats.n_layers += 1
+            stats.n_source_layers += layer.n_source_layers
             stats.n_host_ops += len(layer.host_ops)
             stats.n_device_dispatches += layer.n_dispatches
             stats.host_seconds += t1 - t0
@@ -155,6 +205,9 @@ def run_unfused(
 
     This is the Table I comparison point — identical results, but every
     device op pays its own dispatch. Used by the launch-overhead benchmark.
+    Per-op jitted wrappers come from compile time (``LayerExecutable.
+    op_jits``) so the baseline measures dispatch overhead, not the retrace
+    a fresh ``jax.jit`` wrapper per batch would cost.
     """
     for layer in layers:
         t0 = time.perf_counter()
@@ -163,8 +216,10 @@ def run_unfused(
             res = placed.op.fn(**kwargs)
             env.update({slot: res[slot] for slot in placed.op.outputs})
         t1 = time.perf_counter()
-        for placed in layer.device_ops:
-            fn = jax.jit(placed.op.fn)  # cached by jax after first call
+        # fallback for hand-built executables that predate op_jits
+        fns = layer.op_jits or tuple(jax.jit(p.op.fn)
+                                     for p in layer.device_ops)
+        for placed, fn in zip(layer.device_ops, fns):
             kwargs = {s: env[s] for s in placed.op.inputs}
             res = fn(**kwargs)
             for slot in placed.op.outputs:
@@ -174,6 +229,7 @@ def run_unfused(
         t2 = time.perf_counter()
         if stats is not None:
             stats.n_layers += 1
+            stats.n_source_layers += layer.n_source_layers
             stats.n_host_ops += len(layer.host_ops)
             stats.host_seconds += t1 - t0
             stats.device_seconds += t2 - t1

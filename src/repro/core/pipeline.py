@@ -98,6 +98,47 @@ class PipelinedRunner:
         self.device_feed = device_feed
         self.stats = PipelineStats()
 
+    @classmethod
+    def from_plan(cls, plan: Any, train_step: Callable[[Any, Mapping[str, Any]], Any],
+                  *, prefetch: int = 2, device=None, feed: str = "off",
+                  split_sparse_fields: bool = False,
+                  rows_hint: Optional[int] = None,
+                  buffers: int = 3) -> "PipelinedRunner":
+        """Wire a compiled ``repro.fe.featureplan.FeaturePlan`` into a runner.
+
+        ``feed`` selects the H2D tier:
+
+        * ``"off"``   — two-stage pipeline; the train step receives host
+          arrays (per-tensor transfer on the training critical path);
+        * ``"stage"`` — three-stage: a :class:`DeviceFeeder` memcpys each
+          batch's outputs into the block-planned staging arena and
+          transfers them asynchronously (PR 3 behavior);
+        * ``"arena"`` — zero-copy feed: FE assembles the ``batch_*``
+          outputs **directly into claimed arena views**
+          (``plan.arena_binding()``), eliminating the per-batch
+          env->arena memcpy (``FeedStats.copies_elided``).
+
+        Duck-typed on the plan (``layers`` / ``feed_layout`` /
+        ``arena_binding``) so core stays import-independent of repro.fe.
+        """
+        if feed == "off":
+            return cls(plan.layers, train_step, prefetch=prefetch,
+                       device=device)
+        if feed == "stage":
+            feeder = DeviceFeeder(
+                plan.feed_layout(split_sparse_fields=split_sparse_fields),
+                rows_hint=rows_hint, buffers=buffers, device=device)
+            return cls(plan.layers, train_step, prefetch=prefetch,
+                       device=device, device_feed=feeder)
+        if feed == "arena":
+            ab = plan.arena_binding(split_sparse_fields=split_sparse_fields)
+            feeder = ab.make_feeder(rows_hint=rows_hint, buffers=buffers,
+                                    device=device)
+            return cls(ab.layers, train_step, prefetch=prefetch,
+                       device=device, device_feed=feeder)
+        raise ValueError(
+            f"feed must be 'off', 'stage', or 'arena', got {feed!r}")
+
     def _fe_worker(self, batches: Iterator[Mapping[str, Any]],
                    q: "queue.Queue", stop: threading.Event) -> None:
         try:

@@ -22,6 +22,7 @@ one fused executable per layer ahead of time.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import Dict, List, Optional, Tuple
 
@@ -50,6 +51,58 @@ class Layer:
 
 
 @dataclasses.dataclass(frozen=True)
+class SuperLayer:
+    """A maximal run of consecutive layers with no interleaving host ops.
+
+    Only the first member layer may carry host ops (any later host op would
+    have started a new super-layer), so execution is: host prologue -> one
+    fused device dispatch covering every member layer's device ops. This is
+    the true analogue of the paper's one-launch-per-layer meta-kernel once
+    XLA is the launcher: a dispatch is only *required* where a host barrier
+    interrupts device work, so per batch the device pays
+    ``n_host_barriers + 1`` dispatches instead of one per layer.
+    """
+
+    index: int
+    layers: Tuple[Layer, ...]
+
+    @property
+    def layer_indices(self) -> Tuple[int, ...]:
+        return tuple(layer.index for layer in self.layers)
+
+    @property
+    def host_ops(self) -> Tuple[PlacedOp, ...]:
+        return tuple(p for layer in self.layers for p in layer.host_ops)
+
+    @property
+    def device_ops(self) -> Tuple[PlacedOp, ...]:
+        """Member device ops in layer order (dependency-safe trace order)."""
+        return tuple(p for layer in self.layers for p in layer.device_ops)
+
+    @property
+    def ops(self) -> Tuple[PlacedOp, ...]:
+        return self.host_ops + self.device_ops
+
+
+def coalesce_layers(layers: Tuple[Layer, ...]) -> Tuple[SuperLayer, ...]:
+    """Group layers into super-layers, breaking before every host-op layer.
+
+    A layer with host ops must start a new group: its host ops impose a
+    host barrier (device results of earlier layers must be visible before
+    the host code runs), so its device ops cannot join the previous fused
+    dispatch. Layers with no host ops extend the current group.
+    """
+    groups: List[List[Layer]] = []
+    for layer in layers:
+        if layer.host_ops or not groups:
+            groups.append([layer])
+        else:
+            groups[-1].append(layer)
+    return tuple(SuperLayer(index=i, layers=tuple(g))
+                 for i, g in enumerate(groups))
+
+
+@dataclasses.dataclass(frozen=True)
 class Schedule:
     layers: Tuple[Layer, ...]
     depth_of: Dict[str, int]
@@ -67,6 +120,31 @@ class Schedule:
     def n_unfused_dispatches(self) -> int:
         """What a naive per-op launcher would pay (Table I comparison)."""
         return sum(len(layer.device_ops) for layer in self.layers)
+
+    @property
+    def superlayers(self) -> Tuple[SuperLayer, ...]:
+        """Maximal host-barrier-free layer runs (see :func:`coalesce_layers`)."""
+        return coalesce_layers(self.layers)
+
+    @property
+    def n_host_barriers(self) -> int:
+        """Host stages that interrupt device work (split the device run).
+
+        Host stages *before* the first device op (clean/join/extract) don't
+        count: they delay the first dispatch but don't force an extra one.
+        Consecutive host-only layers collapse into one barrier (their
+        super-layers carry no device ops, so they force no extra dispatch),
+        which is why this is counted over the coalesced structure: it is
+        the number of device-op-bearing super-layers beyond the first —
+        exactly the dispatches a host interruption costs.
+        """
+        return max(0, self.n_coalesced_dispatches - 1)
+
+    @property
+    def n_coalesced_dispatches(self) -> int:
+        """Fused dispatches per batch after super-layer coalescing
+        (``n_host_barriers + 1`` whenever the schedule has device ops)."""
+        return sum(1 for sl in self.superlayers if sl.device_ops)
 
 
 def assign_device(op: Operator, device_bytes_budget: int) -> Device:
@@ -105,10 +183,10 @@ def build_schedule(
     frontier = sorted(name for name, deg in indeg.items() if deg == 0)
     for name in frontier:
         depth[name] = 0
-    queue = list(frontier)
+    queue = collections.deque(frontier)
     processed = 0
     while queue:
-        name = queue.pop(0)
+        name = queue.popleft()
         processed += 1
         for child in dependents[name]:
             depth[child] = max(depth.get(child, 0), depth[name] + 1)

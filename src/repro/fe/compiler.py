@@ -92,6 +92,147 @@ class SpecError(ValueError):
     """A FeatureSpec that cannot be lowered (bad reference, type mismatch)."""
 
 
+@dataclasses.dataclass(frozen=True)
+class _FinalAssembly:
+    """Shape of the ``final_batch`` assembly, shared by the device op and
+    the host output binding so the two can never diverge."""
+
+    has_dense: bool
+    merge_slots: Tuple[str, ...]
+    has_sparse: bool
+    n_sparse_fields: int
+    seq_names: Tuple[str, ...]
+    label_slot: str
+
+
+def _final_assembly(spec: FeatureSpec) -> _FinalAssembly:
+    dense_out = _single(spec, DenseOutput)
+    sparse_out = _single(spec, SparseOutput)
+    seq_out = _single(spec, SequenceOutput)
+    return _FinalAssembly(
+        has_dense=bool(dense_out and dense_out.features),
+        merge_slots=tuple(f"{m.prefix}dense" for m in spec.merges),
+        has_sparse=bool(sparse_out and sparse_out.fields),
+        n_sparse_fields=len(sparse_out.fields) if sparse_out else 0,
+        seq_names=tuple(seq_out.sequences) if seq_out else (),
+        label_slot=f"{spec.label}_col",
+    )
+
+
+class OutputBinding:
+    """Host twin of the device ``final_batch`` op for the zero-copy feed.
+
+    Assembles a spec's ``batch_*`` outputs from the pre-final slots
+    (``dense_feats`` / ``sparse_ids`` / ``<seq>_ids`` / merge slots /
+    label) **directly into caller-provided arrays** — the typed arena
+    views a :class:`~repro.core.devicefeed.DeviceFeeder` claims per batch
+    (``claim_views``). No fresh output arrays are built and no env->arena
+    memcpy happens afterwards; values are bit-identical to the device
+    assembly (the ops are pure copies/concatenations, and the int64->int32
+    sequence-id narrowing matches ``jnp.asarray`` under disabled x64).
+
+    Duck-typed contract consumed by ``DeviceFeeder``: :meth:`ready`,
+    :meth:`rows_of`, :meth:`write`.
+    """
+
+    final_op = "final_batch"
+
+    def __init__(self, assembly: _FinalAssembly,
+                 *, split_sparse_fields: bool = False) -> None:
+        self._asm = assembly
+        self.split_sparse_fields = split_sparse_fields
+        inputs: List[str] = []
+        if assembly.has_dense:
+            inputs.append("dense_feats")
+        inputs.extend(assembly.merge_slots)
+        if assembly.has_sparse:
+            inputs.append("sparse_ids")
+        for n in assembly.seq_names:
+            inputs.extend([f"{n}_ids", f"{n}_mask"])
+        inputs.append(assembly.label_slot)
+        self.input_slots: Tuple[str, ...] = tuple(dict.fromkeys(inputs))
+        self.rows_slot = assembly.label_slot
+
+    def ready(self, env: Mapping[str, object]) -> bool:
+        """True when ``env`` carries the pre-assembly slots this binding
+        consumes (i.e. the FE ran the sans-final layer build)."""
+        return all(s in env for s in self.input_slots)
+
+    def rows_of(self, env: Mapping[str, object]) -> int:
+        return int(np.asarray(env[self.rows_slot]).shape[0])
+
+    def write(self, env: Mapping[str, object],
+              views: Mapping[str, np.ndarray]) -> None:
+        """Assemble every ``batch_*`` output straight into ``views``.
+
+        Shape-validates every source against its destination view first
+        (``np.copyto`` would silently broadcast a wrong-rowed slot into
+        the arena — the zero-copy twin of the copy path's FeedError).
+        """
+        asm = self._asm
+        _copy_into(views["batch_label"], np.asarray(env[asm.label_slot]),
+                   "batch_label")
+        if asm.has_dense or asm.merge_slots:
+            parts = ([np.asarray(env["dense_feats"])] if asm.has_dense else [])
+            parts += [np.asarray(env[s]) for s in asm.merge_slots]
+            _concat_into(views["batch_dense"], parts, "batch_dense")
+        if asm.has_sparse:
+            ids = np.asarray(env["sparse_ids"])
+            if self.split_sparse_fields:
+                want = (views["batch_field_00"].shape[0],
+                        asm.n_sparse_fields)
+                if ids.shape != want:
+                    raise _shape_error("sparse_ids", ids.shape, want)
+                for i in range(asm.n_sparse_fields):
+                    np.copyto(views[f"batch_field_{i:02d}"], ids[:, i],
+                              casting="same_kind")
+            else:
+                _copy_into(views["batch_sparse"], ids, "batch_sparse")
+        if asm.seq_names:
+            _concat_into(views["batch_seq_ids"],
+                         [np.asarray(env[f"{n}_ids"])
+                          for n in asm.seq_names], "batch_seq_ids")
+            _concat_into(views["batch_seq_mask"],
+                         [np.asarray(env[f"{n}_mask"])
+                          for n in asm.seq_names], "batch_seq_mask")
+
+
+def _shape_error(slot: str, got, want) -> Exception:
+    from repro.core.devicefeed import FeedError
+    return FeedError(f"slot {slot!r}: shape {tuple(got)} != layout "
+                     f"{tuple(want)}")
+
+
+def _copy_into(out: np.ndarray, src: np.ndarray, slot: str) -> None:
+    if src.shape != out.shape:
+        raise _shape_error(slot, src.shape, out.shape)
+    np.copyto(out, src, casting="same_kind")
+
+
+def _concat_into(out: np.ndarray, parts: List[np.ndarray],
+                 slot: str) -> None:
+    """Axis-1 concatenation straight into ``out`` (no intermediate)."""
+    if len(parts) == 1:
+        _copy_into(out, parts[0], slot)
+        return
+    rows = out.shape[0]
+    widths = 0
+    for p in parts:
+        if p.ndim != 2 or p.shape[0] != rows:
+            raise _shape_error(slot, p.shape, (rows, "*"))
+        widths += p.shape[1]
+    if widths != out.shape[1]:
+        raise _shape_error(slot, (rows, widths), out.shape)
+    np.concatenate(parts, axis=1, out=out)
+
+
+def output_binding(spec: FeatureSpec, *,
+                   split_sparse_fields: bool = False) -> OutputBinding:
+    """Compile ``spec``'s output-binding (see :class:`OutputBinding`)."""
+    return OutputBinding(_final_assembly(spec),
+                         split_sparse_fields=split_sparse_fields)
+
+
 # ------------------------------------------------------------ name resolution
 @dataclasses.dataclass(frozen=True)
 class _ResolvedCol:

@@ -32,6 +32,34 @@ from repro.fe.spec import DEFAULT_FIELD_SIZE, FeatureSpec
 
 
 @dataclasses.dataclass
+class ArenaBinding:
+    """Zero-copy feed bundle for one plan: everything a runner needs to
+    have FE write its ``batch_*`` outputs straight into the staging arena.
+
+    * :attr:`layers` — the plan's executables with the device
+      ``final_batch`` assembly dropped (its work moves into the binding);
+    * :attr:`binding` — the host assembler targeting claimed arena views
+      (:class:`repro.fe.compiler.OutputBinding`);
+    * :attr:`layout` — the matching :class:`~repro.core.devicefeed.FeedLayout`.
+
+    Typical wiring (or just ``PipelinedRunner.from_plan(..., feed="arena")``)::
+
+        ab = plan.arena_binding(split_sparse_fields=True)
+        runner = PipelinedRunner(ab.layers, step,
+                                 device_feed=ab.make_feeder(rows_hint=rows))
+    """
+
+    layers: List[LayerExecutable]
+    binding: compiler.OutputBinding
+    layout: Any  # repro.core.devicefeed.FeedLayout
+
+    def make_feeder(self, *, rows_hint=None, buffers: int = 3, device=None):
+        from repro.core.devicefeed import DeviceFeeder
+        return DeviceFeeder(self.layout, rows_hint=rows_hint, buffers=buffers,
+                            device=device, binding=self.binding)
+
+
+@dataclasses.dataclass
 class FeaturePlan:
     """A compiled feature pipeline: graph + schedule + layers + layout."""
 
@@ -100,12 +128,35 @@ class FeaturePlan:
                 slots.append(SlotSpec(name, width, dtype, rank1=rank1))
         return FeedLayout(slots=tuple(slots))
 
+    def arena_binding(self, *, split_sparse_fields: bool = False,
+                      coalesce: bool = True) -> ArenaBinding:
+        """Compile this plan's zero-copy feed form (see :class:`ArenaBinding`).
+
+        The returned bundle's layers run everything up to (and excluding)
+        the device ``final_batch`` assembly; the binding assembles the
+        ``batch_*`` outputs host-side **directly into arena views** a
+        :class:`~repro.core.devicefeed.DeviceFeeder` claims per batch, so
+        the per-batch env->arena memcpy of the copy path disappears
+        (``FeedStats.copies_elided`` counts it). Outputs are bit-identical
+        to :attr:`layers` + ``feeder.stage(env)``.
+        """
+        binding = compiler.output_binding(
+            self.spec, split_sparse_fields=split_sparse_fields)
+        return ArenaBinding(
+            layers=compile_layers(self.schedule, coalesce=coalesce,
+                                  drop=(binding.final_op,)),
+            binding=binding,
+            layout=self.feed_layout(split_sparse_fields=split_sparse_fields),
+        )
+
     def summary(self) -> str:
         s = self.schedule
         lay = self.layout
-        return (f"plan {self.spec.name!r}: {s.n_layers} layers, "
-                f"{s.n_device_dispatches} fused device dispatches "
-                f"(vs {s.n_unfused_dispatches} unfused); "
+        return (f"plan {self.spec.name!r}: {s.n_layers} layers "
+                f"({len(s.superlayers)} super-layers), "
+                f"{s.n_coalesced_dispatches} coalesced device dispatches "
+                f"(vs {s.n_device_dispatches} per-layer, "
+                f"{s.n_unfused_dispatches} unfused); "
                 f"outputs: {lay.n_sparse_fields} sparse fields x "
                 f"{lay.field_size} slots, {lay.n_dense_feats} dense, "
                 f"seq_len {lay.seq_len}")

@@ -149,13 +149,20 @@ def run_streaming(args, spec, cfg, train_step, state) -> None:
             ckpt.save_async(len(losses) - 1, state)
         return state
 
+    layers = plan.layers
     feeder = None
-    if args.device_feed == "on":
+    if args.device_feed == "arena":
+        # Zero-copy feed: FE assembles batch_* outputs straight into
+        # claimed arena views (no env->arena memcpy; FeedStats counts the
+        # elided copies). Arena sized up front from the dataset manifest.
+        ab = plan.arena_binding()
+        layers, feeder = ab.layers, ab.make_feeder(rows_hint=loader.rows_hint)
+    elif args.device_feed == "on":
         # Third pipeline stage: batch i+1 is staged through the buffer-ring
         # device arena while batch i trains. Arena sized up front from the
         # dataset manifest via the loader's rows hint.
         feeder = DeviceFeeder(plan.feed_layout(), rows_hint=loader.rows_hint)
-    runner = PipelinedRunner(plan.layers, step_fn,
+    runner = PipelinedRunner(layers, step_fn,
                              prefetch=args.stream_prefetch, device_feed=feeder)
     shard_iter = iter(loader)  # kept so the generator can be closed below
     t0 = time.perf_counter()
@@ -206,9 +213,13 @@ def main() -> None:
                          "(declarative FE scenario preset)")
     ap.add_argument("--gen-shards", type=int, default=0,
                     help="generate this many shards into --data-dir first")
-    ap.add_argument("--device-feed", default="off", choices=["on", "off"],
+    ap.add_argument("--device-feed", default="off",
+                    choices=["on", "off", "arena"],
                     help="stage batches through a buffer-ring device arena "
-                         "on a third pipeline stage (H2D overlaps training)")
+                         "on a third pipeline stage (H2D overlaps training); "
+                         "'arena' additionally assembles FE outputs directly "
+                         "into the arena (zero-copy feed, no env->arena "
+                         "memcpy)")
     ap.add_argument("--stream-workers", type=int, default=2)
     ap.add_argument("--stream-prefetch", type=int, default=4)
     ap.add_argument("--host-id", type=int, default=0)

@@ -1,0 +1,195 @@
+"""Super-layer dispatch coalescing: grouping invariants, dispatch
+accounting (``n_host_barriers + 1``), and bitwise equivalence of the
+coalesced, per-layer, and per-op executors."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    Device,
+    ExecutionStats,
+    coalesce_layers,
+    compile_layers,
+    run_layers,
+    run_unfused,
+)
+from repro.fe import (
+    Custom,
+    DenseOutput,
+    FeatureSpec,
+    LogNorm,
+    Source,
+    SparseOutput,
+    featureplan,
+    get_spec,
+    list_specs,
+)
+from repro.fe.datagen import IMPRESSIONS, gen_views
+
+PRESETS = list_specs()
+BATCH_KEYS = ("batch_dense", "batch_sparse", "batch_seq_ids",
+              "batch_seq_mask", "batch_label")
+
+
+# --------------------------------------------------------- grouping invariants
+@pytest.mark.parametrize("name", PRESETS)
+def test_superlayer_grouping_invariants(name):
+    sched = featureplan.compile(get_spec(name)).schedule
+    supers = sched.superlayers
+    assert supers == coalesce_layers(sched.layers)
+    # partition: every schedule layer appears exactly once, in order
+    covered = [i for sl in supers for i in sl.layer_indices]
+    assert covered == list(range(sched.n_layers))
+    for sl in supers:
+        # only the first member layer may carry host ops — any later host op
+        # would have forced a new super-layer (it is a host barrier)
+        for layer in sl.layers[1:]:
+            assert not layer.host_ops
+        # ops are the members' ops, device ops in layer order
+        assert sl.device_ops == tuple(p for layer in sl.layers
+                                      for p in layer.device_ops)
+
+
+@pytest.mark.parametrize("name", PRESETS)
+def test_dispatches_drop_to_host_barriers_plus_one(name):
+    """The acceptance criterion: per batch, the coalesced executor pays
+    exactly ``n_host_barriers + 1`` device dispatches on every preset."""
+    plan = featureplan.compile(get_spec(name))
+    sched = plan.schedule
+    assert sched.n_coalesced_dispatches == sched.n_host_barriers + 1
+    assert sched.n_coalesced_dispatches < sched.n_device_dispatches \
+        or sched.n_device_dispatches == 1
+
+    stats = ExecutionStats()
+    run_layers(plan.layers, dict(gen_views(32, seed=0)), stats=stats)
+    assert stats.n_device_dispatches == sched.n_host_barriers + 1
+    assert stats.n_source_layers == sched.n_layers
+    assert stats.n_layers == len(sched.superlayers)
+    assert stats.n_layers_coalesced == sched.n_layers - len(sched.superlayers)
+
+
+# -------------------------------------------------------- bitwise equivalence
+@pytest.mark.parametrize("name", PRESETS)
+def test_coalesced_equals_per_layer_and_per_op_bitwise(name):
+    plan = featureplan.compile(get_spec(name))
+    views = gen_views(48, seed=7)
+    coalesced = plan.layers  # compile() coalesces by default
+    per_layer = compile_layers(plan.schedule, coalesce=False)
+
+    s_c, s_p, s_u = ExecutionStats(), ExecutionStats(), ExecutionStats()
+    a = run_layers(coalesced, dict(views), stats=s_c)
+    b = run_layers(per_layer, dict(views), stats=s_p)
+    c = run_unfused(per_layer, dict(views), stats=s_u)
+    for k in BATCH_KEYS:
+        if k not in a:
+            continue
+        for other in (b, c):
+            got, want = np.asarray(other[k]), np.asarray(a[k])
+            assert got.dtype == want.dtype
+            np.testing.assert_array_equal(got, want)
+    assert s_p.n_device_dispatches == plan.schedule.n_device_dispatches
+    assert s_u.n_device_dispatches == plan.schedule.n_unfused_dispatches
+    assert s_c.n_device_dispatches == plan.schedule.n_coalesced_dispatches
+
+
+# ----------------------------------------------- a genuine mid-graph barrier
+def _barrier_spec():
+    """A HOST Custom op that consumes a device op's output forces a host
+    barrier in the middle of the device run: dispatches must become 2."""
+    from repro.fe import Cross
+
+    def boost(**kw):
+        x = np.asarray(kw["x_ua"])
+        return {"boost": (x % 97).astype(np.float32)}
+
+    return FeatureSpec(
+        name="barrier",
+        base="impressions",
+        sources=(Source("impressions", IMPRESSIONS),),
+        transforms=(
+            Cross("x_ua", "user_id", "ad_id"),
+            LogNorm("d_dwell", "dwell_time"),
+            Custom("boost_op", boost, inputs=("x_ua",),
+                   outputs=("boost",), device=Device.HOST),
+        ),
+        outputs=(SparseOutput(("x_ua",)),
+                 DenseOutput(("d_dwell", "boost"))),
+        label="label",
+    )
+
+
+def test_host_barrier_splits_the_device_run():
+    plan = featureplan.compile(_barrier_spec())
+    sched = plan.schedule
+    assert sched.n_host_barriers == 1
+    assert sched.n_coalesced_dispatches == 2 == sched.n_host_barriers + 1
+
+    views = gen_views(32, seed=3)
+    stats = ExecutionStats()
+    a = run_layers(plan.layers, dict(views), stats=stats)
+    assert stats.n_device_dispatches == 2
+    b = run_layers(compile_layers(sched, coalesce=False), dict(views))
+    for k in ("batch_dense", "batch_sparse", "batch_label"):
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]))
+    # the boost column really flowed through the barrier
+    f_user = np.asarray(a["batch_sparse"])[:, 0]
+    np.testing.assert_array_equal(np.asarray(a["batch_dense"])[:, 1],
+                                  (f_user % 97).astype(np.float32))
+
+
+def test_consecutive_host_only_layers_collapse_to_one_barrier():
+    """Two chained HOST Customs after a device op are ONE barrier: their
+    host-only super-layers force no extra dispatch, so dispatches stays
+    barriers+1 — regression for barrier counting that tallied host *layers*
+    instead of host interruptions."""
+    from repro.fe import Cross
+
+    def h1(**kw):
+        return {"mid": np.asarray(kw["x_ua"]) % 31}
+
+    def h2(**kw):
+        return {"boost": (np.asarray(kw["mid"]) % 7).astype(np.float32)}
+
+    spec = FeatureSpec(
+        name="double_host",
+        base="impressions",
+        sources=(Source("impressions", IMPRESSIONS),),
+        transforms=(
+            Cross("x_ua", "user_id", "ad_id"),
+            LogNorm("d_dwell", "dwell_time"),
+            Custom("h1", h1, inputs=("x_ua",), outputs=("mid",),
+                   device=Device.HOST),
+            Custom("h2", h2, inputs=("mid",), outputs=("boost",),
+                   device=Device.HOST),
+        ),
+        # no SparseOutput: nothing shares h1's layer, so h1/h2 really are
+        # consecutive host-ONLY layers between the cross and dense dispatches
+        outputs=(DenseOutput(("d_dwell", "boost")),),
+        label="label",
+    )
+    plan = featureplan.compile(spec)
+    sched = plan.schedule
+    host_only = [layer.index for layer in sched.layers
+                 if layer.host_ops and not layer.device_ops]
+    assert any(b == a + 1 for a, b in zip(host_only, host_only[1:]))
+    # h1 and h2 are consecutive host-only layers: one interruption
+    assert sched.n_host_barriers == 1
+    assert sched.n_coalesced_dispatches == 2
+    stats = ExecutionStats()
+    run_layers(plan.layers, dict(gen_views(16, seed=4)), stats=stats)
+    assert stats.n_device_dispatches == sched.n_host_barriers + 1 == 2
+
+
+# ------------------------------------------------- unfused baseline hygiene
+def test_run_unfused_uses_compile_time_jits():
+    """Satellite: per-op jit wrappers are hoisted into compile so the
+    unfused baseline pays dispatch overhead, not a retrace per batch."""
+    plan = featureplan.compile(get_spec("ads_ctr"))
+    per_layer = compile_layers(plan.schedule, coalesce=False)
+    for layer in per_layer:
+        assert len(layer.op_jits) == len(layer.device_ops)
+    before = [id(f) for layer in per_layer for f in layer.op_jits]
+    run_unfused(per_layer, dict(gen_views(16, seed=1)))
+    run_unfused(per_layer, dict(gen_views(16, seed=2)))
+    after = [id(f) for layer in per_layer for f in layer.op_jits]
+    assert before == after  # same wrappers across batches: no rebuild

@@ -341,6 +341,168 @@ def test_feed_train_error_joins_both_workers():
     assert pipeline_threads_gone()
 
 
+# ------------------------------------------------- direct-to-arena staging
+def test_claim_views_match_block_plan():
+    """claim_views returns typed views laid out exactly where the Alg. 1
+    block plan puts them, inside the claimed ring buffer."""
+    plan = featureplan.compile(get_spec("ads_ctr"))
+    fl = plan.feed_layout()
+    feeder = DeviceFeeder(fl, rows_hint=32)
+    rows = 32
+    claim = feeder.claim_views(rows)
+    off_plan, _total = fl.plan(rows)
+    base = feeder._host[claim.buffer_index].__array_interface__["data"][0]
+    assert set(claim.views) == set(fl.slot_names)
+    for spec, alloc, off in zip(fl.slots, claim.allocs, off_plan):
+        view = claim.views[spec.name]
+        assert view.dtype == np.dtype(spec.dtype)
+        assert view.shape == ((rows,) if spec.rank1 else (rows, spec.width))
+        assert alloc.offset == off
+        vbase = view.__array_interface__["data"][0]
+        assert vbase == base + alloc.offset  # view IS the arena bytes
+        assert vbase % fl.align == 0
+
+
+def test_stage_with_claim_elides_arena_resident_slots():
+    """A producer that wrote its outputs into claimed views pays no
+    env->arena memcpy: stage(env, claim=...) transfers in place."""
+    plan = featureplan.compile(get_spec("ads_ctr"))
+    feeder = DeviceFeeder(plan.feed_layout(), rows_hint=24)
+    env = plan.run(gen_views(24, seed=5))
+    claim = feeder.claim_views(24)
+    filled = dict(env)
+    for name, view in claim.views.items():
+        np.copyto(view, np.asarray(env[name]), casting="no")
+        filled[name] = view
+    staged = feeder.stage(filled, claim=claim)
+    assert feeder.stats.copies_elided == len(plan.feed_layout().slots)
+    for k in plan.output_slots:
+        np.testing.assert_array_equal(np.asarray(staged[k]),
+                                      np.asarray(env[k]))
+
+
+@pytest.mark.parametrize("name", PRESETS)
+@pytest.mark.parametrize("split", [False, True])
+def test_arena_binding_stage_bit_identical_to_copy_path(name, split):
+    """Zero-copy feed == copy path, bitwise: the binding assembles batch_*
+    straight into the arena from the sans-final env."""
+    from repro.core import run_layers
+
+    plan = featureplan.compile(get_spec(name))
+    ab = plan.arena_binding(split_sparse_fields=split)
+    rows = 48
+    views = gen_views(rows, seed=21)
+
+    want = plan.run(dict(views))  # full layers: reference batch_* values
+    copy_feeder = DeviceFeeder(plan.feed_layout(split_sparse_fields=split),
+                               rows_hint=rows)
+    want_staged = copy_feeder.stage(want)
+
+    env = run_layers(ab.layers, dict(views))
+    assert not any(k.startswith("batch_") for k in env)  # final op dropped
+    feeder = ab.make_feeder(rows_hint=rows)
+    staged = feeder.stage(env)
+    assert feeder.stats.copies_elided == len(ab.layout.slots)
+    assert copy_feeder.stats.copies_elided == 0
+    assert feeder.stats.bytes_staged == copy_feeder.stats.bytes_staged
+    for slot in ab.layout.slot_names:
+        a, b = np.asarray(staged[slot]), np.asarray(want_staged[slot])
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(a, b)
+
+
+def test_arena_binding_ring_rewind_stress_bitwise():
+    """buffers=1 direct staging: every batch rewrites the same arena bytes
+    through claimed views; earlier staged batches must stay intact."""
+    plan = featureplan.compile(get_spec("ads_ctr"))
+    ab = plan.arena_binding()
+    feeder = ab.make_feeder(rows_hint=16, buffers=1)
+    from repro.core import run_layers
+
+    staged, want = [], []
+    for i in range(5):
+        views = gen_views(16, seed=40 + i)
+        want.append(plan.outputs(plan.run(dict(views))))
+        staged.append(feeder.stage(run_layers(ab.layers, dict(views))))
+    assert feeder.stats.rewinds == 5
+    assert feeder.stats.copies_elided == 5 * len(ab.layout.slots)
+    for got, exp in zip(staged, want):
+        for k in exp:
+            np.testing.assert_array_equal(np.asarray(got[k]),
+                                          np.asarray(exp[k]))
+
+
+def test_arena_binding_regrow_orphans_preclaim_transfers():
+    """A claim taken before a regrow must not file its transfers under the
+    fresh ring (indices point at new buffers): they become orphans that
+    flush() still awaits."""
+    plan = featureplan.compile(get_spec("ads_ctr"))
+    ab = plan.arena_binding()
+    feeder = ab.make_feeder(rows_hint=16)
+    from repro.core import run_layers
+
+    env_small = run_layers(ab.layers, dict(gen_views(16, seed=1)))
+    claim = feeder.claim_views(16)  # filled only after the regrow below
+    feeder.stage(run_layers(ab.layers, dict(gen_views(64, seed=2))))  # regrow
+    assert feeder.stats.reallocs == 1
+    ab.binding.write(env_small, claim.views)
+    staged = feeder.stage({**env_small, **claim.views}, claim=claim)
+    assert feeder._orphans  # pre-regrow transfers tracked as orphans
+    feeder.flush()
+    assert not feeder._orphans
+    want = plan.outputs(plan.run(dict(gen_views(16, seed=1))))
+    for k in want:
+        np.testing.assert_array_equal(np.asarray(staged[k]),
+                                      np.asarray(want[k]))
+
+
+@pytest.mark.parametrize("split", [False, True])
+def test_arena_binding_rejects_shape_violations(split):
+    """The zero-copy path must FeedError on wrong-rowed slots like the
+    copy path does — np.copyto would otherwise silently broadcast a bad
+    producer slot across the whole arena view."""
+    from repro.core import run_layers
+
+    plan = featureplan.compile(get_spec("ads_ctr"))
+    ab = plan.arena_binding(split_sparse_fields=split)
+    env = run_layers(ab.layers, dict(gen_views(16, seed=8)))
+
+    for slot, sliced in (
+        ("sparse_ids", lambda a: a[:1]),       # would broadcast rows
+        ("dense_feats", lambda a: a[:, :-1]),  # would shrink the concat
+        ("interest_ids", lambda a: a[:1]),
+    ):
+        bad = dict(env)
+        bad[slot] = sliced(np.asarray(env[slot]))
+        feeder = ab.make_feeder(rows_hint=16)
+        with pytest.raises(FeedError, match="shape"):
+            feeder.stage(bad)
+
+
+def test_runner_from_plan_arena_matches_off_bitwise():
+    plan = featureplan.compile(get_spec("bst"))
+    batches = [gen_views(24, seed=90 + i) for i in range(4)]
+    results = {}
+    for feed in ("off", "stage", "arena"):
+        seen = []
+        runner = PipelinedRunner.from_plan(plan, recording_step(seen),
+                                           feed=feed, rows_hint=24, buffers=2)
+        runner.run({"batches": 0}, [dict(b) for b in batches])
+        results[feed] = (seen, runner.stats.feed)
+    base, _ = results["off"]
+    assert len(base) == 4
+    for feed in ("stage", "arena"):
+        seen, fs = results[feed]
+        assert len(seen) == 4
+        for a, b in zip(base, seen):
+            assert set(a) == set(b)
+            for k in a:
+                assert a[k].dtype == b[k].dtype
+                np.testing.assert_array_equal(a[k], b[k])
+    assert results["arena"][1].copies_elided > 0
+    assert results["stage"][1].copies_elided == 0
+
+
 # The runner-equivalence property test (hypothesis) lives in
 # tests/test_runner_equivalence.py — importorskip at module level would
 # skip this whole file on hypothesis-free installs.

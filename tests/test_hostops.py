@@ -1,0 +1,125 @@
+"""Vectorized host string ops vs their per-row ``_ref`` oracles, plus
+cross-process hash determinism (the PYTHONHASHSEED regression).
+
+Hypothesis property tests live in tests/test_hostops_property.py so these
+deterministic checks run on hypothesis-free installs too.
+"""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+
+from repro.fe.colstore import RaggedColumn
+from repro.fe.ops import (
+    _WHITESPACE_CODEPOINTS,
+    ragged_to_padded,
+    ragged_to_padded_ref,
+    tokenize_hash,
+    tokenize_hash_ref,
+)
+
+
+def assert_ragged_equal(a: RaggedColumn, b: RaggedColumn) -> None:
+    np.testing.assert_array_equal(a.lengths, b.lengths)
+    np.testing.assert_array_equal(a.values, b.values)
+    assert a.values.dtype == b.values.dtype
+    assert a.lengths.dtype == b.lengths.dtype
+
+
+# ------------------------------------------------------------ tokenization
+def test_whitespace_table_matches_python_exactly():
+    """The vectorized tokenizer's separator set IS ``str.split()``'s: every
+    codepoint agrees with ``chr(c).isspace()`` over the whole Unicode range
+    (surrogates excluded — they can't appear in well-formed strings)."""
+    ws = set(int(c) for c in _WHITESPACE_CODEPOINTS)
+    for c in range(0x110000):
+        if 0xD800 <= c <= 0xDFFF:
+            continue
+        assert (c in ws) == chr(c).isspace(), hex(c)
+
+
+def test_tokenize_hash_known_edges():
+    cases = [
+        ["a b c", "", "a a"],
+        ["  leading and trailing  ", "\t\n\x0b\x0c\r mixed \x1c\x1d\x1e\x1f"],
+        [" nbsp em　ideographic", "\x00nul\x00separates"],
+        ["\U0001f680 emoji tokens \U0001f680", "héllo wörld"],
+        ["single"],
+        [],
+        ["", "", ""],
+        ["x" * 500 + " tail"],  # one very long token
+    ]
+    for ngrams in (1, 2, 3):
+        for rows in cases:
+            arr = np.asarray(rows, object)
+            assert_ragged_equal(
+                tokenize_hash(arr, field_size=1009, ngrams=ngrams),
+                tokenize_hash_ref(arr, field_size=1009, ngrams=ngrams))
+
+
+def test_tokenize_hash_bytes_dtype_matches_ref():
+    """S-dtype rows must take the same str() route as object rows do in
+    the ref (the repr form, not a decode) — regression for a vec/ref
+    divergence on bytes columns."""
+    for rows in (np.asarray([b"ab cd", b"", b"x"]),
+                 np.asarray([b"ab cd", b"x y z", "plain", 3], object),
+                 np.asarray([1, 22, 333])):
+        assert_ragged_equal(tokenize_hash(rows, field_size=1000, ngrams=2),
+                            tokenize_hash_ref(rows, field_size=1000, ngrams=2))
+
+
+def test_identical_tokens_hash_identically():
+    col = tokenize_hash(np.asarray(["tok other tok"], object),
+                        field_size=1 << 20)
+    row = col.row(0)
+    assert row[0] == row[2] != row[1]
+
+
+def test_tokenize_hash_deterministic_across_processes():
+    """Token ids must not depend on the builtin ``hash()``: a fresh
+    interpreter with a different PYTHONHASHSEED must produce identical
+    ids (multi-host training shards features by id)."""
+    code = (
+        "import numpy as np\n"
+        "from repro.fe.ops import tokenize_hash\n"
+        "c = tokenize_hash(np.asarray(['alpha beta gamma', 'x \\u00e9y'],"
+        " object), field_size=10007, ngrams=2)\n"
+        "print(','.join(map(str, c.values)), ','.join(map(str, c.lengths)))\n"
+    )
+    src_root = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    outs = set()
+    for seed in ("0", "1", "424242"):
+        env = dict(os.environ, PYTHONHASHSEED=seed)
+        env["PYTHONPATH"] = src_root + os.pathsep + env.get("PYTHONPATH", "")
+        outs.add(subprocess.check_output(
+            [sys.executable, "-c", code], env=env).decode().strip())
+    assert len(outs) == 1, f"token ids vary across processes: {outs}"
+
+
+# ------------------------------------------------------------ ragged pad
+def test_ragged_to_padded_truncates_and_masks():
+    col = RaggedColumn(values=np.arange(10, dtype=np.int64),
+                       lengths=np.asarray([3, 0, 7], np.int32))
+    ids, mask = ragged_to_padded(col, max_len=4, pad_id=-5)
+    np.testing.assert_array_equal(ids[0], [0, 1, 2, -5])
+    np.testing.assert_array_equal(ids[1], [-5] * 4)
+    np.testing.assert_array_equal(ids[2], [3, 4, 5, 6])  # truncated at 4
+    assert mask.sum() == 3 + 0 + 4
+
+
+def test_ragged_to_padded_edge_shapes_match_ref():
+    empty = RaggedColumn(values=np.zeros((0,), np.int64),
+                         lengths=np.zeros((0,), np.int32))
+    allzero = RaggedColumn(values=np.zeros((0,), np.int64),
+                           lengths=np.zeros((5,), np.int32))
+    long = RaggedColumn(values=np.arange(1000, dtype=np.int64),
+                        lengths=np.asarray([1000], np.int32))
+    for col in (empty, allzero, long):
+        for max_len in (0, 1, 8, 2048):
+            a_ids, a_mask = ragged_to_padded(col, max_len=max_len)
+            b_ids, b_mask = ragged_to_padded_ref(col, max_len=max_len)
+            np.testing.assert_array_equal(a_ids, b_ids)
+            np.testing.assert_array_equal(a_mask, b_mask)

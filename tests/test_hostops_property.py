@@ -1,0 +1,70 @@
+"""Hypothesis property tests: vectorized host ops == their ``_ref``
+oracles bit-for-bit, over adversarial unicode/empty/long-row inputs."""
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
+
+from test_hostops import assert_ragged_equal  # noqa: E402
+
+from repro.fe.colstore import RaggedColumn  # noqa: E402
+from repro.fe.ops import (  # noqa: E402
+    ragged_to_padded,
+    ragged_to_padded_ref,
+    tokenize_hash,
+    tokenize_hash_ref,
+)
+
+
+@hypothesis.settings(max_examples=60, deadline=None)
+@hypothesis.given(
+    rows=st.lists(st.text(max_size=40), max_size=12),
+    ngrams=st.integers(min_value=1, max_value=3),
+    field_size=st.sampled_from([7, 1009, 1 << 20]),
+)
+def test_tokenize_hash_matches_ref_property(rows, ngrams, field_size):
+    arr = np.asarray(rows, object)
+    assert_ragged_equal(
+        tokenize_hash(arr, field_size=field_size, ngrams=ngrams),
+        tokenize_hash_ref(arr, field_size=field_size, ngrams=ngrams))
+
+
+@hypothesis.settings(max_examples=25, deadline=None)
+@hypothesis.given(
+    rows=st.lists(
+        st.text(alphabet=st.sampled_from(" \t　ab\U0001f680"),
+                max_size=200),
+        max_size=6))
+def test_tokenize_hash_matches_ref_whitespace_heavy(rows):
+    """Long separator runs and multi-byte tokens — the boundary cases a
+    shifted-mask tokenizer gets wrong first."""
+    arr = np.asarray(rows, object)
+    assert_ragged_equal(tokenize_hash(arr, field_size=997, ngrams=2),
+                        tokenize_hash_ref(arr, field_size=997, ngrams=2))
+
+
+@st.composite
+def _ragged_columns(draw):
+    lengths = draw(st.lists(st.integers(min_value=0, max_value=12),
+                            max_size=10))
+    lengths = np.asarray(lengths, np.int32)
+    values = draw(st.lists(st.integers(min_value=-2**40, max_value=2**40),
+                           min_size=int(lengths.sum()),
+                           max_size=int(lengths.sum())))
+    return RaggedColumn(values=np.asarray(values, np.int64), lengths=lengths)
+
+
+@hypothesis.settings(max_examples=60, deadline=None)
+@hypothesis.given(col=_ragged_columns(),
+                  max_len=st.integers(min_value=0, max_value=16),
+                  pad_id=st.sampled_from([0, -1, 7]))
+def test_ragged_to_padded_matches_ref_property(col, max_len, pad_id):
+    got_ids, got_mask = ragged_to_padded(col, max_len=max_len, pad_id=pad_id)
+    want_ids, want_mask = ragged_to_padded_ref(col, max_len=max_len,
+                                               pad_id=pad_id)
+    np.testing.assert_array_equal(got_ids, want_ids)
+    np.testing.assert_array_equal(got_mask, want_mask)
+    assert got_ids.dtype == want_ids.dtype
+    assert got_mask.dtype == want_mask.dtype

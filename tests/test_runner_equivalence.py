@@ -1,7 +1,8 @@
 """Runner-equivalence property test: for random small specs and batches,
-``PipelinedRunner`` (with and without the device-feed stage) and
-``StagedRunner`` produce identical final state and identical per-slot
-outputs — previously only the legacy ads_ctr path asserted this."""
+``PipelinedRunner`` — with and without the device-feed stage, with
+super-layer coalescing on and off, and with the direct-to-arena zero-copy
+feed — and ``StagedRunner`` all produce identical final state and
+identical per-slot outputs."""
 
 import numpy as np
 import pytest
@@ -72,15 +73,21 @@ def _small_specs(draw):
                   seed=st.integers(min_value=0, max_value=2**16))
 def test_runners_equivalent_on_random_specs(spec, rows, n_batches, seed,
                                             tmp_path_factory):
+    from repro.core import compile_layers
+
     plan = featureplan.compile(spec)
+    per_layer = compile_layers(plan.schedule, coalesce=False)
     batches = [gen_views(rows, seed=seed + i) for i in range(n_batches)]
 
     results = []
     for make in (
         lambda: PipelinedRunner(plan.layers, None, prefetch=2),
+        lambda: PipelinedRunner(per_layer, None, prefetch=2),
         lambda: PipelinedRunner(
             plan.layers, None, prefetch=2,
             device_feed=DeviceFeeder(plan.feed_layout(), rows_hint=rows)),
+        lambda: PipelinedRunner.from_plan(plan, None, feed="arena",
+                                          rows_hint=rows),
         lambda: StagedRunner(
             plan.layers, None,
             workdir=str(tmp_path_factory.mktemp("staged"))),
