@@ -84,6 +84,10 @@ def dispatch_rows() -> List[Dict]:
         out.append({
             "name": f"pipeline_dispatch_{name}",
             "us_per_call": dt * 1e6,
+            # deterministic gated metric for run.py --compare: fused
+            # device dispatches per batch (machine-independent)
+            "gate": True,
+            "metric": float(stats.n_device_dispatches),
             "derived": f"dispatches/batch coalesced="
                        f"{timed['coalesced'][1].n_device_dispatches} "
                        f"(= host_barriers({sched.n_host_barriers})+1) "

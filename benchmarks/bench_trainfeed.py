@@ -1,0 +1,136 @@
+"""Train-feed suite: the stage->train boundary, before/after compilation.
+
+One row per claim the compiled boundary (``repro.fe.modelfeed``) makes:
+
+* **adaptation at compile time** — the eager spec->arch adapter's per-step
+  cost and dispatch count (the ops the fusion removes) vs the fused step
+  where adaptation is traced inside the train jit;
+* **one dispatch per step** — gated metric: ``dispatches_per_step == 1``
+  on the fused path (deterministic, machine-independent);
+* **dedup'd working set** — gated metric: unique-id ratio on the ads_ctr
+  preset x dlrm smoke arch (deterministic for the seeded data): collective
+  embedding traffic is proportional to it, not to batch x fields;
+* **donated staged buffers** — the arena-fed pipeline with the staged
+  batch donated through the jit (FeedStats.donated accounts reuse).
+
+Gated rows carry ``gate``/``metric`` for ``benchmarks.run --compare``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List
+
+from repro.configs import get_arch
+from repro.core import PipelinedRunner
+from repro.fe import featureplan, get_spec
+from repro.fe.datagen import gen_views
+
+ROWS = 2048
+STEPS = 6
+
+
+def _setup(rows: int):
+    import jax
+
+    from repro.models import recsys as R
+    from repro.train.optimizer import adamw
+
+    plan = featureplan.compile(get_spec("ads_ctr"))
+    cfg = dataclasses.replace(get_arch("dlrm-mlperf").smoke(),
+                              dedup_capacity=0)
+    mf = plan.model_feed(cfg, rows_hint=rows)
+    cfg = mf.config
+    opt = adamw(1e-3)
+    params = R.init_params(cfg, jax.random.PRNGKey(0))
+    raw_step, init_st, _ = R.make_sparse_train_step(cfg, opt)
+    state = {"params": params, "opt": init_st(params)}
+    return plan, cfg, mf, raw_step, state
+
+
+def boundary_rows() -> List[Dict]:
+    plan, cfg, mf, raw_step, state0 = _setup(ROWS)
+    env = plan.run(gen_views(ROWS, seed=0))
+    out: List[Dict] = []
+
+    # eager adaptation alone: the per-step dispatches fusion removes
+    feed = mf.select(env)
+    mf.apply(feed)  # warm
+    t0 = time.perf_counter()
+    for _ in range(STEPS):
+        batch = mf.apply(feed)
+    for v in batch.values():
+        v.block_until_ready()
+    dt_adapt = (time.perf_counter() - t0) / STEPS
+    n_ops = mf.eager_adapt_ops(feed)
+    out.append({"name": "trainfeed_adapt_eager",
+                "us_per_call": dt_adapt * 1e6,
+                "derived": f"{n_ops} eager dispatches/step on the "
+                           f"stage->train boundary (fused: 0)"})
+
+    timings = {}
+    for label, fused in (("eager", False), ("fused", True)):
+        plan_, cfg_, mf_, raw_, state = _setup(ROWS)
+        step = mf_.make_step(raw_, fused=fused, donate=True)
+        p, o = state["params"], state["opt"]
+        p, o, _ = step(p, o, env)  # warm/compile
+        t0 = time.perf_counter()
+        for _ in range(STEPS):
+            p, o, m = step(p, o, env)
+        float(m["loss"])
+        dt = (time.perf_counter() - t0) / STEPS
+        timings[label] = (dt, mf_.stats)
+        out.append({"name": f"trainfeed_step_{label}",
+                    "us_per_call": dt * 1e6,
+                    "derived": f"dispatches/step="
+                               f"{mf_.stats.dispatches_per_step:.1f} "
+                               f"adapt={mf_.stats.adapt_seconds * 1e6 / (STEPS + 1):.0f}"
+                               f"us/step"})
+    fused_stats = timings["fused"][1]
+    out.append({"name": "trainfeed_dispatches", "us_per_call": 0.0,
+                "gate": True, "metric": fused_stats.dispatches_per_step,
+                "derived": f"fused boundary dispatches/step="
+                           f"{fused_stats.dispatches_per_step:.1f} "
+                           f"(adapt traced inside the train jit; "
+                           f"eager pays {timings['eager'][1].dispatches_per_step:.1f})"})
+    out.append({"name": "trainfeed_dedup_ratio", "us_per_call": 0.0,
+                "gate": True, "metric": round(fused_stats.unique_ratio, 4),
+                "derived": f"unique/referenced ids="
+                           f"{fused_stats.unique_ratio:.3f} "
+                           f"(capacity={cfg.dedup_capacity}, "
+                           f"overflows={fused_stats.overflows})"})
+    return out
+
+
+def donation_rows() -> List[Dict]:
+    plan, cfg, mf_unused, raw_step, state = _setup(ROWS)
+    mf = plan.model_feed(cfg, split_sparse_fields=True)
+    ab = plan.arena_binding(split_sparse_fields=True)
+    feeder = ab.make_feeder(rows_hint=ROWS)
+    step = mf.make_step(raw_step, donate=True,
+                        fence_cb=feeder.donation_fence)
+
+    def step_fn(st, env):
+        p, o, m = step(st["params"], st["opt"], env)
+        float(m["loss"])
+        return {"params": p, "opt": o}
+
+    step_fn.feed_stats = mf.stats
+    runner = PipelinedRunner(ab.layers, step_fn, device_feed=feeder)
+    batches = [gen_views(ROWS, seed=10 + i) for i in range(STEPS)]
+    t0 = time.perf_counter()
+    runner.run(state, [dict(b) for b in batches])
+    wall = time.perf_counter() - t0
+    fs = runner.stats.feed
+    tf = runner.stats.train_feed
+    return [{"name": "trainfeed_donated_arena_e2e",
+             "us_per_call": wall / STEPS * 1e6,
+             "derived": f"donated={fs.donated} elided={fs.copies_elided} "
+                        f"staged={fs.bytes_staged / 2**20:.1f}MiB "
+                        f"adapt={runner.stats.adapt_seconds:.3f}s "
+                        f"unique_ratio={tf.unique_ratio:.3f}"}]
+
+
+def run() -> List[Dict]:
+    return boundary_rows() + donation_rows()

@@ -6,18 +6,25 @@ Fails (nonzero exit) if any of the PR's structural perf claims regress:
   == ``n_host_barriers + 1`` (and strictly fewer than per-layer fusion);
 * zero-copy feed: direct-to-arena staging elides the env->arena memcpy
   for every slot (``copies_elided > 0``) with bit-identical outputs;
-* vectorized host ops: ``tokenize_hash`` == the ``_ref`` oracle bitwise.
+* vectorized host ops: ``tokenize_hash`` == the ``_ref`` oracle bitwise;
+* compiled train-feed boundary: adaptation traced inside the train jit
+  (dispatches/step == 1, zero eager adapt ops), ``ModelFeed.apply`` ==
+  the eager reference bitwise, and the dedup'd working set referencing
+  strictly fewer unique ids than batch x fields on the ads_ctr preset.
 
   PYTHONPATH=src python -m benchmarks.perf_smoke
 """
 
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
 
 from repro.core import ExecutionStats, PipelinedRunner, run_layers
 from repro.fe import featureplan, get_spec
 from repro.fe.datagen import gen_views
+from repro.fe.modelfeed import fe_env_to_model_batch_ref
 from repro.fe.ops import tokenize_hash, tokenize_hash_ref
 
 
@@ -59,6 +66,57 @@ def main() -> None:
         np.testing.assert_array_equal(seen[0][k], np.asarray(env[k]))
     print(f"zero-copy feed: copies_elided={fs.copies_elided}, "
           f"staged={fs.bytes_staged} bytes, outputs bit-identical")
+
+    # --- compiled train-feed boundary -------------------------------------
+    import jax
+
+    from repro.configs import get_arch
+    from repro.models import recsys as R
+    from repro.train.optimizer import adamw
+
+    cfg = dataclasses.replace(get_arch("dlrm-mlperf").smoke(),
+                              dedup_capacity=0)
+    mf = plan.model_feed(cfg, split_sparse_fields=True, rows_hint=256)
+    cfg = mf.config
+    ref = fe_env_to_model_batch_ref(env, cfg)
+    got = jax.jit(mf.apply)(mf.select(
+        {**env, **{f"batch_field_{i:02d}": np.asarray(env["batch_sparse"])[:, i]
+                   for i in range(np.asarray(env["batch_sparse"]).shape[1])}}))
+    for k in ref:
+        np.testing.assert_array_equal(np.asarray(ref[k]), np.asarray(got[k]))
+    opt = adamw(1e-3)
+    raw_step, init_st, _ = R.make_sparse_train_step(cfg, opt)
+    params = R.init_params(cfg, jax.random.PRNGKey(0))
+    ab = plan.arena_binding(split_sparse_fields=True)
+    feeder = ab.make_feeder(rows_hint=256)
+    boundary = mf.make_step(raw_step, donate=True,
+                            fence_cb=feeder.donation_fence)
+
+    def step_fn(state, e):
+        p, o, m = boundary(state["params"], state["opt"], e)
+        float(m["loss"])
+        return {"params": p, "opt": o}
+
+    step_fn.feed_stats = mf.stats
+    runner2 = PipelinedRunner(ab.layers, step_fn, device_feed=feeder)
+    runner2.run({"params": params, "opt": init_st(params)},
+                [gen_views(256, seed=i) for i in range(3)])
+    tf = runner2.stats.train_feed
+    assert tf is not None and tf.steps == 3, "train-feed tier not captured"
+    assert tf.adapt_dispatches == 0, (
+        f"{tf.adapt_dispatches} eager adaptation dispatches leaked onto "
+        f"the stage->train boundary (must be traced inside the train jit)")
+    assert tf.dispatches_per_step == 1, (
+        f"stage->train boundary pays {tf.dispatches_per_step} "
+        f"dispatches/step, want exactly the one train-jit call")
+    assert 0 < tf.unique_ratio < 1, (
+        f"dedup unique-ratio {tf.unique_ratio} not < 1 on ads_ctr: the "
+        f"working-set path is not deduplicating")
+    assert tf.overflows == 0, "working-set capacity hint overflowed"
+    print(f"train-feed: dispatches/step={tf.dispatches_per_step:.0f} "
+          f"(adapt fused into the train jit), "
+          f"unique_ratio={tf.unique_ratio:.3f} "
+          f"(capacity={cfg.dedup_capacity}), adapt==ref bitwise")
 
     # --- vectorized host ops ----------------------------------------------
     strings = views["user_profile"]["query_text"]

@@ -7,10 +7,20 @@ Prints ``name,us_per_call,derived`` CSV (one row per measurement).
   PYTHONPATH=src python -m benchmarks.run --list      # suite names only
   PYTHONPATH=src python -m benchmarks.run --only pipeline \
       --json BENCH_pipeline.json                      # machine-readable dump
+  PYTHONPATH=src python -m benchmarks.run --only trainfeed \
+      --compare BENCH_trainfeed.json                  # regression gate
 
 ``--json PATH`` additionally writes every selected suite's rows (plus
 failure markers) as JSON — the committed ``BENCH_*.json`` baselines CI
 and future PRs compare against.
+
+``--compare BASELINE`` loads a committed baseline, prints the per-row
+delta for every matching row, and exits nonzero if any **gated** row
+regressed by more than 25%. Rows opt into gating with ``gate: True``; a
+gated row is compared on its ``metric`` value when it carries one
+(deterministic, machine-independent counts/ratios — dispatches per step,
+dedup unique ratio) and on ``us_per_call`` otherwise, lower always
+better. CI's perf-smoke job runs the trainfeed comparison.
 
 Exits nonzero if any selected suite fails, so CI can gate on the run.
 """
@@ -23,6 +33,64 @@ import platform
 import sys
 import traceback
 
+REGRESSION_MARGIN = 1.25  # gated rows fail beyond +25%
+
+
+def _gate_value(row) -> float:
+    """The comparison scalar of a row: its deterministic metric when it
+    has one, else the measured time (lower is better for both)."""
+    if row.get("metric") is not None:
+        return float(row["metric"])
+    return float(row["us_per_call"])
+
+
+def compare_to_baseline(report, baseline_path: str) -> int:
+    """Print per-row deltas vs a committed baseline; count gated regressions."""
+    with open(baseline_path) as f:
+        base = json.load(f)
+    base_rows = {r["name"]: r
+                 for s in base.get("suites", {}).values()
+                 for r in s.get("rows", [])}
+    regressions = []
+    print(f"--- compare vs {baseline_path} " + "-" * 30, file=sys.stderr)
+    seen = {r["name"] for s in report["suites"].values()
+            for r in s.get("rows", [])}
+    # A gated baseline row that vanished (renamed, dropped, or no longer
+    # flagged) is itself a gate failure — otherwise deleting the row
+    # silently disables the regression check.
+    for suite_name, s in base.get("suites", {}).items():
+        if suite_name not in report["suites"]:
+            continue  # baseline covers suites the current selection skipped
+        for r in s.get("rows", []):
+            if r.get("gate") and r["name"] not in seen:
+                print(f"{r['name']}: gated baseline row MISSING from this "
+                      f"run", file=sys.stderr)
+                regressions.append(f"{r['name']} (missing)")
+    for suite in report["suites"].values():
+        for row in suite.get("rows", []):
+            old = base_rows.get(row["name"])
+            if old is None:
+                print(f"{row['name']}: new row (no baseline)", file=sys.stderr)
+                continue
+            new_v, old_v = _gate_value(row), _gate_value(old)
+            gated = bool(row.get("gate"))
+            if old_v <= 0:
+                delta = "n/a" if new_v <= 0 else "+inf"
+                bad = gated and new_v > 0
+            else:
+                ratio = new_v / old_v
+                delta = f"{(ratio - 1) * 100:+.1f}%"
+                bad = gated and ratio > REGRESSION_MARGIN
+            mark = " GATE-REGRESSED" if bad else (" [gated]" if gated else "")
+            print(f"{row['name']}: {old_v:g} -> {new_v:g} ({delta}){mark}",
+                  file=sys.stderr)
+            if bad:
+                regressions.append(row["name"])
+    if regressions:
+        print(f"gated rows regressed >{(REGRESSION_MARGIN - 1) * 100:.0f}%: "
+              f"{', '.join(regressions)}", file=sys.stderr)
+    return len(regressions)
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
@@ -32,11 +100,15 @@ def main() -> None:
     ap.add_argument("--json", default="", metavar="PATH",
                     help="also write the selected suites' rows to PATH "
                          "(BENCH_<suite>.json baseline format)")
+    ap.add_argument("--compare", default="", metavar="BASELINE",
+                    help="compare the selected suites' rows against a "
+                         "committed BENCH_*.json; print per-row deltas and "
+                         "exit nonzero if a gated row regressed >25%")
     args = ap.parse_args()
 
     from benchmarks import bench_devicefeed, bench_end_to_end, \
         bench_feature_extraction, bench_hierarchy, bench_ingest, \
-        bench_launch_overhead, bench_pipeline, roofline
+        bench_launch_overhead, bench_pipeline, bench_trainfeed, roofline
 
     suites = [
         ("launch_overhead(TableI)", bench_launch_overhead.run),
@@ -45,6 +117,7 @@ def main() -> None:
         ("ingest(shard streaming)", bench_ingest.run),
         ("devicefeed(H2D overlap)", bench_devicefeed.run),
         ("pipeline(hot path)", bench_pipeline.run),
+        ("trainfeed(stage->train)", bench_trainfeed.run),
         ("hierarchy(PS tiers)", bench_hierarchy.run),
         ("roofline", roofline.run),
     ]
@@ -64,11 +137,17 @@ def main() -> None:
             for row in rows:
                 derived = str(row.get("derived", "")).replace(",", ";")
                 print(f"{row['name']},{row['us_per_call']:.2f},{derived}")
-            report["suites"][name] = {
-                "rows": [{"name": r["name"],
-                          "us_per_call": round(float(r["us_per_call"]), 2),
-                          "derived": str(r.get("derived", ""))}
-                         for r in rows]}
+            out_rows = []
+            for r in rows:
+                out = {"name": r["name"],
+                       "us_per_call": round(float(r["us_per_call"]), 2),
+                       "derived": str(r.get("derived", ""))}
+                if r.get("gate"):
+                    out["gate"] = True
+                if r.get("metric") is not None:
+                    out["metric"] = float(r["metric"])
+                out_rows.append(out)
+            report["suites"][name] = {"rows": out_rows}
         except Exception:
             failed.append(name)
             traceback.print_exc()
@@ -79,9 +158,13 @@ def main() -> None:
             json.dump(report, f, indent=2)
             f.write("\n")
         print(f"wrote {args.json}", file=sys.stderr)
+    n_regressed = (compare_to_baseline(report, args.compare)
+                   if args.compare else 0)
     if failed:
         print(f"FAILED suites: {', '.join(failed)}", file=sys.stderr)
         sys.exit(1)
+    if n_regressed:
+        sys.exit(2)
 
 
 if __name__ == "__main__":

@@ -256,11 +256,12 @@ def recsys_cell(cfg: R.RecsysConfig, shape: str, mesh: Mesh, *,
     seq_rows = batch * (cfg.seq_len + 1) if cfg.kind == "bst" else 0
     if "cap_expected" in flags:
         # expected-unique capacity (x1.15 safety) instead of the worst-case
-        # sum(min(B, v)): E[unique_i] = v(1 - (1 - 1/v)^B) for uniform ids
-        exp = sum(v * (1.0 - (1.0 - 1.0 / v) ** batch) for v in cfg.vocab_sizes)
+        # sum(min(B, v)) — the same E[unique] model the streaming driver's
+        # dedup_capacity_hint(mode="expected") uses
+        from repro.embedding.dedup import expected_unique
+        exp = sum(expected_unique(batch, v) for v in cfg.vocab_sizes)
         if cfg.kind == "bst":
-            v0 = cfg.vocab_sizes[cfg.item_field]
-            exp += v0 * (1.0 - (1.0 - 1.0 / v0) ** seq_rows)
+            exp += expected_unique(seq_rows, cfg.vocab_sizes[cfg.item_field])
         cap = int(exp * 1.15)
     else:
         cap = recsys_dedup_cap(cfg, batch, seq_rows)

@@ -148,6 +148,9 @@ class FeedStats:
     copies_elided: int = 0      # slots staged without an env->arena memcpy
     #   (zero-copy feed: the producer wrote the slot straight into a
     #   claimed arena view, so stage() had nothing to copy)
+    donated: int = 0            # staged arrays reclaimed via consumer donation
+    #   (deleted by a jit that took ownership of the staged batch; the
+    #   completion gate awaits the donation fence instead of the array)
 
     @property
     def h2d_bytes_per_second(self) -> float:
@@ -161,7 +164,7 @@ class FeedStats:
                 f"stall={self.stall_seconds:.2f}s "
                 f"arena={self.arena_capacity / 2**10:.0f}KiB x{self.buffers} "
                 f"rewinds={self.rewinds} reallocs={self.reallocs} "
-                f"elided={self.copies_elided}")
+                f"elided={self.copies_elided} donated={self.donated}")
 
 
 class FeedError(RuntimeError):
@@ -242,6 +245,15 @@ class DeviceFeeder:
         # None until the first transfer probes whether device_put zero-copies
         # 128-byte-aligned host views on this backend (see _put).
         self._zero_copy_put: Optional[bool] = None
+        # Donation-fence protocol state (see donation_fence): the latest
+        # consumer output, and how many consumer steps have registered one.
+        # Staged batches are consumed in order, so a buffer whose batch was
+        # the n-th staged is covered once _consumed_seq >= n.
+        self._fence_cond = threading.Condition()
+        self._fence: Optional[jax.Array] = None
+        self._consumed_seq = 0
+        self._seq = 0                                  # batches staged
+        self._inflight_seq: List[int] = [0] * buffers  # stage seq per buffer
         self._next = 0
         # Arena generation: bumped by every regrow so transfers issued from
         # a pre-regrow ArenaClaim are tracked as orphans, not misfiled
@@ -278,6 +290,7 @@ class DeviceFeeder:
             self._host = [self._aligned_zeros(need)
                           for _ in range(self.buffers)]
             self._inflight = [[] for _ in range(self.buffers)]
+            self._inflight_seq = [0] * self.buffers
             self._next = 0
             self._epoch += 1
         self.stats.arena_capacity = need
@@ -292,12 +305,82 @@ class DeviceFeeder:
             b = self._next
             self._next = (self._next + 1) % self.buffers
             pending, self._inflight[b] = self._inflight[b], []
-        if pending:
-            t0 = time.perf_counter()
-            for dev in pending:
-                dev.block_until_ready()
-            self.stats.stall_seconds += time.perf_counter() - t0
+            seq = self._inflight_seq[b]
+        self._await_completion(pending, seq)
         return b
+
+    # Ceiling on waiting for a consumer that donated staged arrays but
+    # whose fence registration never arrives (mis-wired protocol, dead
+    # consumer): proceed best-effort after this, counting the stall.
+    DONATION_FENCE_TIMEOUT = 10.0
+
+    def _await_completion(self, pending: List[jax.Array],
+                          seq: int = 0) -> None:
+        """Block until every array in ``pending`` is done with its staging
+        buffer. An array a consumer jit *donated* (``make_step(donate=
+        True)`` in :mod:`repro.fe.modelfeed`) is deleted and cannot be
+        awaited; instead the gate waits for the :meth:`donation_fence` of
+        the step that consumed the buffer's batch — batches are consumed
+        in stage order, so that is the ``seq``-th registered fence — and
+        awaits it. The fence is an output of the consuming step, and a
+        step cannot execute before its inputs' transfers complete, so the
+        fence's readiness implies the donated transfers finished. Deletion
+        happens at consumer *dispatch*, i.e. possibly before that step's
+        fence is registered; the sequence wait (not just "latest fence")
+        closes that window."""
+        donated = 0
+        t0 = time.perf_counter()
+        for dev in pending:
+            if _deleted(dev):
+                donated += 1
+                continue
+            try:
+                dev.block_until_ready()
+            except RuntimeError:
+                # Deleted between the check and the await (the consumer
+                # thread donates concurrently with ring reclaim).
+                if not _deleted(dev):
+                    raise
+                donated += 1
+        if donated:
+            self.stats.donated += donated
+            fence = self._await_donation_fence(seq)
+            if fence is not None and not _deleted(fence):
+                fence.block_until_ready()
+        self.stats.stall_seconds += time.perf_counter() - t0
+
+    def _await_donation_fence(self, seq: int) -> Optional[jax.Array]:
+        """Wait until the consumer of the ``seq``-th staged batch has
+        registered its fence; returns the fence to await (None when no
+        consumer ever joined the fence protocol — then donation safety
+        rests on deletion implying the consumer dispatched, which orders
+        after the transfers were enqueued)."""
+        with self._fence_cond:
+            if self._consumed_seq == 0 and self._fence is None:
+                return None
+            deadline = time.monotonic() + self.DONATION_FENCE_TIMEOUT
+            while self._consumed_seq < seq:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    break  # mis-wired/dead consumer: best effort
+                self._fence_cond.wait(remaining)
+            return self._fence
+
+    def donation_fence(self, fence: Optional[jax.Array]) -> None:
+        """Consumer handshake for donated staged batches.
+
+        A train step that takes ownership of the staged batch (buffer
+        donation) deletes the staged arrays, breaking the ring's
+        await-the-array completion gate. The driver registers one of the
+        step's *outputs* here after **every** step call, in consumption
+        order; the gate awaits the fence of the step that consumed a
+        donated buffer in place of its deleted arrays (see
+        :meth:`_await_completion`).
+        """
+        with self._fence_cond:
+            self._fence = fence
+            self._consumed_seq += 1
+            self._fence_cond.notify_all()
 
     # --------------------------------------------------------------- staging
     def _rows(self, env: Mapping[str, Any]) -> int:
@@ -460,8 +543,10 @@ class DeviceFeeder:
             # fresh ring (indices refer to new buffers): they join the
             # orphans flush() awaits.
             with self._lock:
+                self._seq += 1
                 if claim.epoch == self._epoch:
                     self._inflight[claim.buffer_index] = devs
+                    self._inflight_seq[claim.buffer_index] = self._seq
                 else:
                     self._orphans.extend(devs)
 
@@ -481,14 +566,28 @@ class DeviceFeeder:
         died and ones orphaned by an arena regrow.
         """
         with self._lock:
-            pending = [d for devs in self._inflight for d in devs]
-            pending.extend(self._orphans)
+            groups = [(devs, seq) for devs, seq
+                      in zip(self._inflight, self._inflight_seq) if devs]
+            # Orphans predate the current ring (regrow): no per-buffer seq;
+            # awaited with the no-wait fallback (seq 0 is always covered).
+            orphans = self._orphans
             self._inflight = [[] for _ in range(self.buffers)]
+            self._inflight_seq = [0] * self.buffers
             self._orphans = []
-        t0 = time.perf_counter()
-        for dev in pending:
-            dev.block_until_ready()
-        self.stats.stall_seconds += time.perf_counter() - t0
+        for devs, seq in groups:
+            self._await_completion(devs, seq)
+        self._await_completion(orphans)
+
+
+def _deleted(dev: jax.Array) -> bool:
+    """True if ``dev`` was deleted (donated into a consumer computation)."""
+    fn = getattr(dev, "is_deleted", None)
+    if fn is None:
+        return False
+    try:
+        return bool(fn())
+    except Exception:
+        return False
 
 
 def _aliases_host(dev: jax.Array, view: np.ndarray) -> bool:

@@ -62,6 +62,23 @@ class PipelineStats:
     # When a DeviceFeeder staged the batches, its FeedStats (h2d bytes/s,
     # arena rewinds, buffer stalls) are attached here after run().
     feed: Optional[Any] = None
+    # When the train step is a compiled boundary step (repro.fe.modelfeed
+    # make_step), its TrainFeedStats (adapt time/dispatches, dedup unique
+    # ratio) are attached here after run(), splitting "adapt" out of the
+    # train bucket.
+    train_feed: Optional[Any] = None
+
+    @property
+    def adapt_seconds(self) -> float:
+        """Host time spent adapting staged batches to the model's layout
+        (0 when the train step carries no train-feed stats)."""
+        return (self.train_feed.adapt_seconds
+                if self.train_feed is not None else 0.0)
+
+    @property
+    def train_net_seconds(self) -> float:
+        """train_seconds with the measurable adapt share split out."""
+        return max(self.train_seconds - self.adapt_seconds, 0.0)
 
 
 def _capture_ingest(stats: PipelineStats, batches: Any) -> None:
@@ -72,6 +89,17 @@ def _capture_ingest(stats: PipelineStats, batches: Any) -> None:
     src_stats = getattr(batches, "stats", None)
     if src_stats is not None and hasattr(src_stats, "bytes_read"):
         stats.ingest = src_stats
+
+
+def _capture_train_feed(stats: PipelineStats, train_step: Any) -> None:
+    """Adopt train-feed stats from a modelfeed-compiled boundary step.
+
+    Duck-typed off the step's ``feed_stats`` attribute so core stays
+    import-independent of :mod:`repro.fe`.
+    """
+    fs = getattr(train_step, "feed_stats", None)
+    if fs is not None and hasattr(fs, "adapt_seconds"):
+        stats.train_feed = fs
 
 
 class PipelinedRunner:
@@ -255,6 +283,7 @@ class PipelinedRunner:
                 self.stats.feed = self.device_feed.stats
             self.stats.wall_seconds = time.perf_counter() - t_start
             _capture_ingest(self.stats, batches)
+            _capture_train_feed(self.stats, self.train_step)
         return state
 
 
@@ -333,6 +362,7 @@ class StagedRunner:
             self.stats.train_seconds += time.perf_counter() - t0
             self.stats.batches += 1
         self.stats.wall_seconds = time.perf_counter() - t_start
+        _capture_train_feed(self.stats, self.train_step)
         return state
 
 

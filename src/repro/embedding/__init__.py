@@ -1,6 +1,12 @@
 """Embedding substrate: dedup working sets, sharded tables, hierarchical PS."""
 
-from repro.embedding.dedup import dedup, dedup_np, scatter_unique_grads, undedup
+from repro.embedding.dedup import (
+    dedup,
+    dedup_np,
+    expected_unique,
+    scatter_unique_grads,
+    undedup,
+)
 from repro.embedding.hierarchy import HierarchicalPS, TierStats
 from repro.embedding.table import (
     MultiTable,
@@ -24,6 +30,7 @@ __all__ = [
     "bag_lookup_segment",
     "dedup",
     "dedup_np",
+    "expected_unique",
     "init_sparse_adagrad",
     "lookup",
     "lookup_dedup",

@@ -46,6 +46,18 @@ def dedup(ids: jax.Array, *, capacity: int) -> Tuple[jax.Array, jax.Array, jax.A
     return unique, inverse.reshape(ids.shape).astype(jnp.int32), count
 
 
+def expected_unique(rows: int, vocab: int) -> float:
+    """E[#unique] of ``rows`` uniform draws from a ``vocab``-id space:
+    ``v (1 - (1 - 1/v)^n)``. The sizing heuristic for working-set
+    capacities (``dedup(..., capacity=...)``) when the worst case
+    ``min(rows, vocab)`` is too loose — shared by the dry-run cells'
+    ``cap_expected`` variant and the train driver's
+    :func:`repro.fe.modelfeed.dedup_capacity_hint`."""
+    if rows <= 0 or vocab <= 0:
+        return 0.0
+    return vocab * (1.0 - (1.0 - 1.0 / vocab) ** rows)
+
+
 def dedup_np(ids: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
     """Host dedup (exact size): returns (unique ids, inverse)."""
     unique, inverse = np.unique(ids.reshape(-1), return_inverse=True)

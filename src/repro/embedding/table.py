@@ -76,6 +76,20 @@ class MultiTable:
         offs = jnp.asarray(self.offsets, jnp.int32)
         return field_ids.astype(jnp.int32) + offs[None, :]
 
+    def lookup_dedup(self, params: jax.Array, field_ids: jax.Array, *,
+                     capacity: int) -> jax.Array:
+        """Working-set lookup over per-field local ids: (B, F) -> (B, F, D).
+
+        The packed-table form of :func:`lookup_dedup` — per-field ids are
+        offset into the packed global row space, deduplicated ONCE across
+        all fields (repeats across fields collapse too), gathered, and
+        expanded. This is the embedding feed the per-field staged id
+        vectors (``split_sparse_fields``) flow into via the compiled
+        train-feed boundary (:mod:`repro.fe.modelfeed`).
+        """
+        return lookup_dedup(params, self.global_ids(field_ids),
+                            capacity=capacity)
+
 
 # ------------------------------------------------------------------ lookups
 def lookup(params: jax.Array, ids: jax.Array) -> jax.Array:

@@ -88,6 +88,18 @@ class OutputLayout:
         return tuple(slots)
 
 
+def field_slot(i: int) -> str:
+    """Staged slot name of sparse field ``i``'s per-field id vector (the
+    ``split_sparse_fields`` feed form; mirrored by the core device feeder's
+    ``batch_field_``-prefix derivation, which must stay fe-independent)."""
+    return f"batch_field_{i:02d}"
+
+
+def field_slots(n: int) -> Tuple[str, ...]:
+    """All per-field staged slot names of an ``n``-field sparse block."""
+    return tuple(field_slot(i) for i in range(n))
+
+
 class SpecError(ValueError):
     """A FeatureSpec that cannot be lowered (bad reference, type mismatch)."""
 
@@ -179,12 +191,12 @@ class OutputBinding:
         if asm.has_sparse:
             ids = np.asarray(env["sparse_ids"])
             if self.split_sparse_fields:
-                want = (views["batch_field_00"].shape[0],
+                want = (views[field_slot(0)].shape[0],
                         asm.n_sparse_fields)
                 if ids.shape != want:
                     raise _shape_error("sparse_ids", ids.shape, want)
                 for i in range(asm.n_sparse_fields):
-                    np.copyto(views[f"batch_field_{i:02d}"], ids[:, i],
+                    np.copyto(views[field_slot(i)], ids[:, i],
                               casting="same_kind")
             else:
                 _copy_into(views["batch_sparse"], ids, "batch_sparse")

@@ -121,7 +121,7 @@ class FeaturePlan:
             if name not in emitted:
                 continue
             if name == "batch_sparse" and split_sparse_fields:
-                slots.extend(SlotSpec(f"batch_field_{i:02d}", 1, dtype,
+                slots.extend(SlotSpec(compiler.field_slot(i), 1, dtype,
                                       rank1=True)
                              for i in range(width))
             else:
@@ -148,6 +148,17 @@ class FeaturePlan:
             binding=binding,
             layout=self.feed_layout(split_sparse_fields=split_sparse_fields),
         )
+
+    def model_feed(self, cfg, *, split_sparse_fields: bool = False,
+                   rows_hint=None, **kw):
+        """Compile the stage->train adaptation plan for this plan x ``cfg``
+        (see :mod:`repro.fe.modelfeed`): a :class:`~repro.fe.modelfeed.
+        ModelFeed` whose ``apply`` is traced inside the train step's jit,
+        with the sparse working-set capacity tuned from ``rows_hint``."""
+        from repro.fe import modelfeed
+        return modelfeed.compile(self, cfg,
+                                 split_sparse_fields=split_sparse_fields,
+                                 rows_hint=rows_hint, **kw)
 
     def summary(self) -> str:
         s = self.schedule

@@ -66,48 +66,33 @@ def synthetic_batch(family: str, cfg, batch: int, step: int) -> Dict[str, Any]:
     return {k: jnp.asarray(v) for k, v in g.items()}
 
 
-def fe_env_to_model_batch(env: Dict[str, Any], cfg) -> Dict[str, Any]:
-    """Adapt FE-pipeline outputs to a recsys model batch.
+# Reference oracle for the compiled boundary (kept importable under the old
+# name; repro.fe.modelfeed.compile is the production path).
+from repro.fe.modelfeed import fe_env_to_model_batch_ref as fe_env_to_model_batch  # noqa: E402,E501
 
-    A compiled ``FeaturePlan`` emits a spec-dependent layout (e.g. ads_ctr:
-    9 dense feats, 8 sparse fields, 48 seq positions); the arch config may
-    want a different width, so columns are tiled / re-hashed into the
-    config's field vocabularies. Specs without a dense block (bst) or
-    sequence block (dlrm-as-plain) degrade gracefully: missing blocks are
-    synthesized from the sparse fields. Pure jnp so device arrays staged
-    by ``--device-feed on`` are adapted where they already live — a host
-    round-trip here would put a blocking D2H readback plus a second H2D
-    on the training critical path, inverting the flag's whole point.
+
+def run_streaming(args, spec, cfg, state, opt) -> None:
+    """Stream raw-log shards from disk through FE into the train step.
+
+    The stage->train boundary is compiled: ``repro.fe.modelfeed`` derives
+    the spec->arch adaptation from the plan's ``OutputLayout`` at compile
+    time and traces it INSIDE the train step's jit (``--adapt fused``,
+    default) — one fused dispatch per step, versus ~10 eager per-step jnp
+    ops for the legacy adapter (``--adapt eager``, kept as the measurable
+    baseline). The sparse working-set capacity is tuned from the dataset
+    manifest's rows hint so the dedup'd embedding path runs by default,
+    ``--device-feed arena`` stages per-field id vectors straight into the
+    ring arena (``split_sparse_fields``), and the staged batch + params +
+    optimizer state are donated through the jit (``--no-donate`` opts out)
+    with the feeder's ``donation_fence`` accounting the reuse.
     """
-    sparse = jnp.asarray(env["batch_sparse"])
-    idx = np.arange(cfg.n_sparse) % sparse.shape[1]
-    vocab = np.asarray(cfg.vocab_sizes[:cfg.n_sparse], np.int32)
-    batch: Dict[str, Any] = {
-        "sparse": (sparse[:, idx] % vocab).astype(jnp.int32),
-        "label": jnp.asarray(env["batch_label"]).astype(jnp.float32),
-    }
-    if cfg.n_dense:
-        if "batch_dense" in env:
-            dense = jnp.asarray(env["batch_dense"]).astype(jnp.float32)
-        else:  # spec emits no dense block: log-scaled sparse ids stand in
-            dense = jnp.log1p(sparse.astype(jnp.float32))
-        reps = -(-cfg.n_dense // dense.shape[1])  # ceil
-        batch["dense"] = jnp.tile(dense, (1, reps))[:, :cfg.n_dense]
-    if cfg.kind == "bst":
-        seq = (jnp.asarray(env["batch_seq_ids"])
-               if "batch_seq_ids" in env else sparse)
-        reps = -(-cfg.seq_len // seq.shape[1])
-        batch["seq"] = (jnp.tile(seq, (1, reps))[:, :cfg.seq_len]
-                        % cfg.vocab_sizes[0]).astype(jnp.int32)
-    return batch
+    import dataclasses
 
-
-def run_streaming(args, spec, cfg, train_step, state) -> None:
-    """Stream raw-log shards from disk through FE into the train step."""
     from repro.core import DeviceFeeder, PipelinedRunner
     from repro.fe import featureplan, get_spec
     from repro.io.dataset import ShardDataset
     from repro.io.stream import StreamingLoader
+    from repro.models import recsys as R
 
     if spec.family != "recsys":
         raise SystemExit(
@@ -138,30 +123,52 @@ def run_streaming(args, spec, cfg, train_step, state) -> None:
     ckpt = (CheckpointManager(args.checkpoint_dir)
             if args.checkpoint_dir else None)
 
-    losses = []
-
-    def step_fn(state, env):
-        batch = fe_env_to_model_batch(env, cfg)
-        p, o, m = train_step(state["params"], state["opt"], batch)
-        losses.append(float(m["loss"]))
-        state = {"params": p, "opt": o}
-        if ckpt is not None and len(losses) % args.checkpoint_every == 0:
-            ckpt.save_async(len(losses) - 1, state)
-        return state
+    # Compile the stage->train boundary: static field remap + vocab modulo
+    # + block synthesis, working-set capacity sized from the manifest.
+    # Without a manifest rows hint the capacity is left untuned (0): the
+    # train step then falls back to its always-safe batch-sized bound —
+    # streaming batches are SHARD-sized, so sizing from --batch could
+    # silently undersize the working set and drop ids.
+    split = args.device_feed == "arena"
+    if cfg.dedup_capacity:
+        cfg = dataclasses.replace(cfg, dedup_capacity=0)  # re-tune per data
+    mf = plan.model_feed(cfg, split_sparse_fields=split,
+                         rows_hint=loader.rows_hint)
+    cfg = mf.config
+    raw_step, _, _ = R.make_sparse_train_step(cfg, opt)
 
     layers = plan.layers
     feeder = None
     if args.device_feed == "arena":
         # Zero-copy feed: FE assembles batch_* outputs straight into
         # claimed arena views (no env->arena memcpy; FeedStats counts the
-        # elided copies). Arena sized up front from the dataset manifest.
-        ab = plan.arena_binding()
+        # elided copies) — per-field id vectors, so the sparse feed lands
+        # in the shape the dedup'd embedding lookup consumes. Arena sized
+        # up front from the dataset manifest.
+        ab = plan.arena_binding(split_sparse_fields=True)
         layers, feeder = ab.layers, ab.make_feeder(rows_hint=loader.rows_hint)
     elif args.device_feed == "on":
         # Third pipeline stage: batch i+1 is staged through the buffer-ring
         # device arena while batch i trains. Arena sized up front from the
         # dataset manifest via the loader's rows hint.
         feeder = DeviceFeeder(plan.feed_layout(), rows_hint=loader.rows_hint)
+
+    fused = mf.make_step(
+        raw_step, fused=(args.adapt == "fused"), donate=not args.no_donate,
+        fence_cb=(feeder.donation_fence if feeder is not None else None))
+
+    losses = []
+
+    def step_fn(state, env):
+        p, o, m = fused(state["params"], state["opt"], env)
+        losses.append(float(m["loss"]))
+        state = {"params": p, "opt": o}
+        if ckpt is not None and len(losses) % args.checkpoint_every == 0:
+            ckpt.save_async(len(losses) - 1, state)
+        return state
+
+    step_fn.feed_stats = mf.stats  # runners adopt the train-feed tier
+
     runner = PipelinedRunner(layers, step_fn,
                              prefetch=args.stream_prefetch, device_feed=feeder)
     shard_iter = iter(loader)  # kept so the generator can be closed below
@@ -188,11 +195,14 @@ def run_streaming(args, spec, cfg, train_step, state) -> None:
     print(f"arch={args.arch} spec={args.spec} mode=streaming steps={s.batches} "
           f"loss {losses[0]:.4f} -> {losses[-1]:.4f} "
           f"({dt:.1f}s, {dt/max(s.batches,1)*1e3:.1f} ms/step; "
-          f"fe={s.fe_seconds:.2f}s train={s.train_seconds:.2f}s "
-          f"wall={s.wall_seconds:.2f}s)")
+          f"fe={s.fe_seconds:.2f}s train={s.train_net_seconds:.2f}s "
+          f"adapt={s.adapt_seconds:.3f}s wall={s.wall_seconds:.2f}s)")
     print(f"ingest: {loader.stats.summary()}")
     if s.feed is not None:
         print(f"device-feed: {s.feed.summary()}")
+    if s.train_feed is not None:
+        print(f"train-feed: {s.train_feed.summary()} "
+              f"(capacity={cfg.dedup_capacity})")
 
 
 def main() -> None:
@@ -219,7 +229,16 @@ def main() -> None:
                          "on a third pipeline stage (H2D overlaps training); "
                          "'arena' additionally assembles FE outputs directly "
                          "into the arena (zero-copy feed, no env->arena "
-                         "memcpy)")
+                         "memcpy) as per-field id vectors for the dedup'd "
+                         "embedding feed")
+    ap.add_argument("--adapt", default="fused", choices=["fused", "eager"],
+                    help="spec->arch batch adaptation: 'fused' traces the "
+                         "compiled ModelFeed plan inside the train step's "
+                         "jit (one dispatch per step); 'eager' keeps the "
+                         "legacy per-step jnp ops (the measurable baseline)")
+    ap.add_argument("--no-donate", action="store_true",
+                    help="do not donate params/optimizer/staged batch "
+                         "through the jitted train step")
     ap.add_argument("--stream-workers", type=int, default=2)
     ap.add_argument("--stream-prefetch", type=int, default=4)
     ap.add_argument("--host-id", type=int, default=0)
@@ -251,7 +270,10 @@ def main() -> None:
     state = {"params": params, "opt": opt_state}
 
     if args.data_dir:
-        run_streaming(args, spec, cfg, train_step, state)
+        # The streaming path builds its own boundary step: the working-set
+        # capacity is tuned from the dataset manifest, so the train step
+        # is compiled there (same state/optimizer structure).
+        run_streaming(args, spec, cfg, state, opt)
         return
 
     def step_wrapper(state, batch):

@@ -392,11 +392,11 @@ def make_sparse_train_step(c: RecsysConfig, dense_optimizer, *,
         if mesh is not None and batch_axes is not None and local_dedup_capacity:
             # two-stage dedup: shrink the globally-sorted pool (§Perf pair 1)
             from repro.embedding.dedup import dedup_hierarchical
-            unique, inverse, _ = dedup_hierarchical(
+            unique, inverse, n_unique = dedup_hierarchical(
                 flat_all, capacity=cap, mesh=mesh, axes=batch_axes,
                 local_capacity=local_dedup_capacity)
         else:
-            unique, inverse, _ = dedup(flat_all, capacity=cap)
+            unique, inverse, n_unique = dedup(flat_all, capacity=cap)
         safe = jnp.where(unique == jnp.int32(2**31 - 1), 0, unique)
         working = jnp.take(params["embed"], safe, axis=0)        # (cap, D)
 
@@ -443,7 +443,12 @@ def make_sparse_train_step(c: RecsysConfig, dense_optimizer, *,
 
         new_params = dict(new_dense)
         new_params["embed"] = embed
-        return new_params, {"dense": new_dense_state, "embed_accum": accum}, {"loss": loss}
+        # "unique"/"n_ids" feed the train-feed tier's dedup accounting
+        # (TrainFeedStats.unique_ratio: collective traffic is proportional
+        # to unique, not batch x fields — the [37]/FeatureBox win).
+        metrics = {"loss": loss, "unique": n_unique,
+                   "n_ids": jnp.int32(flat_all.shape[0])}
+        return new_params, {"dense": new_dense_state, "embed_accum": accum}, metrics
 
     return train_step, init, abstract_state
 

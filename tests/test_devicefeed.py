@@ -503,6 +503,121 @@ def test_runner_from_plan_arena_matches_off_bitwise():
     assert results["stage"][1].copies_elided == 0
 
 
+# ---------------------------------------------------- donation handshake
+def _donating_consumer():
+    """A jit that takes ownership of its staged inputs (buffer donation)
+    and aliases every slot to an output, so the backend actually deletes
+    the donated arrays (unusable donations are passed through alive)."""
+    import warnings
+
+    import jax
+
+    jitted = jax.jit(lambda b: {k: v + 1 for k, v in b.items()},
+                     donate_argnums=(0,))
+
+    def consume(env, slots):
+        staged = {k: env[k] for k in slots}
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            return jitted(staged)
+
+    return consume
+
+
+def test_donated_staged_arrays_reclaim_via_fence():
+    from repro.core.devicefeed import FeedLayout, SlotSpec
+    layout = FeedLayout(slots=(SlotSpec("batch_label", 1, "float32",
+                                        rank1=True),
+                               SlotSpec("batch_sparse", 4, "int32")))
+    feeder = DeviceFeeder(layout, rows_hint=8, buffers=2)
+    env = {"batch_label": np.ones(8, np.float32),
+           "batch_sparse": np.arange(32, dtype=np.int32).reshape(8, 4)}
+    consume = _donating_consumer()
+
+    out = feeder.stage(dict(env))
+    staged = [out[s] for s in layout.slot_names]
+    res = consume(out, layout.slot_names)
+    assert all(d.is_deleted() for d in staged), "consumer did not donate"
+    feeder.donation_fence(res["batch_label"])
+
+    # cycle the 2-slot ring: reclaiming the donated buffer must not raise
+    # on the deleted arrays, and must account them
+    feeder.stage(dict(env))
+    out3 = feeder.stage(dict(env))
+    assert feeder.stats.donated == len(layout.slots)
+    # the ring still stages bit-identical batches afterwards
+    np.testing.assert_array_equal(np.asarray(out3["batch_sparse"]),
+                                  env["batch_sparse"])
+    feeder.flush()
+
+
+def test_flush_tolerates_donated_arrays():
+    from repro.core.devicefeed import FeedLayout, SlotSpec
+    layout = FeedLayout(slots=(SlotSpec("batch_label", 1, "float32",
+                                        rank1=True),))
+    feeder = DeviceFeeder(layout, rows_hint=4, buffers=2)
+    out = feeder.stage({"batch_label": np.ones(4, np.float32)})
+    res = _donating_consumer()(out, layout.slot_names)
+    feeder.donation_fence(res["batch_label"])
+    feeder.flush()  # must not raise on the deleted staged array
+    assert feeder.stats.donated == 1
+
+
+def test_donation_gate_waits_for_the_consuming_steps_fence():
+    """Donation deletes staged arrays at consumer *dispatch* — possibly
+    before that step's fence is registered. Reclaiming the buffer must
+    wait for the fence of the step that consumed it (sequence wait), not
+    settle for a stale earlier fence."""
+    import threading
+    import time
+
+    from repro.core.devicefeed import FeedLayout, SlotSpec
+    layout = FeedLayout(slots=(SlotSpec("batch_label", 1, "float32",
+                                        rank1=True),))
+    feeder = DeviceFeeder(layout, rows_hint=4, buffers=1)
+    consume = _donating_consumer()
+    env = {"batch_label": np.ones(4, np.float32)}
+
+    out1 = feeder.stage(dict(env))                       # staged seq 1
+    res1 = consume(out1, layout.slot_names)
+    feeder.donation_fence(res1["batch_label"])           # consumed seq 1
+    out2 = feeder.stage(dict(env))                       # staged seq 2
+    res2 = consume(out2, layout.slot_names)              # donated, NO fence yet
+
+    done = threading.Event()
+
+    def reclaim():
+        feeder.stage(dict(env))  # needs seq-2 fence before rewriting
+        done.set()
+
+    t = threading.Thread(target=reclaim, daemon=True)
+    t.start()
+    time.sleep(0.3)
+    assert not done.is_set(), "gate reclaimed a donated buffer before the " \
+                              "consuming step registered its fence"
+    feeder.donation_fence(res2["batch_label"])           # consumed seq 2
+    assert done.wait(5.0)
+    t.join(5.0)
+    assert feeder.stats.donated >= 2
+    assert feeder.stats.stall_seconds >= 0.25
+    feeder.flush()
+
+
+def test_fence_is_optional_for_donated_arrays():
+    # Without a registered fence the gate still cannot crash — it counts
+    # the donated arrays and proceeds (the driver-side fence is the
+    # belt-and-braces completion ordering, not a liveness requirement).
+    from repro.core.devicefeed import FeedLayout, SlotSpec
+    layout = FeedLayout(slots=(SlotSpec("batch_label", 1, "float32",
+                                        rank1=True),))
+    feeder = DeviceFeeder(layout, rows_hint=4, buffers=1)
+    out = feeder.stage({"batch_label": np.ones(4, np.float32)})
+    _donating_consumer()(out, layout.slot_names)
+    feeder.stage({"batch_label": np.zeros(4, np.float32)})  # reclaims slot 0
+    assert feeder.stats.donated == 1
+    feeder.flush()
+
+
 # The runner-equivalence property test (hypothesis) lives in
 # tests/test_runner_equivalence.py — importorskip at module level would
 # skip this whole file on hypothesis-free installs.

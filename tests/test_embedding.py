@@ -92,6 +92,61 @@ def test_multitable_offsets_and_ids():
         MultiTable.build([TableSpec("a", 10, 8), TableSpec("b", 10, 16)])
 
 
+# ----------------------------------------------- preset working-set paths
+PRESETS = ("ads_ctr", "dlrm", "bst")
+
+
+def _preset_batch_ids(preset, rows=32):
+    """(tuned cfg, per-field local ids) a preset's compiled plan feeds the
+    embedding layer: FE outputs adapted through the compiled train-feed
+    boundary (repro.fe.modelfeed), exactly as the streaming driver wires."""
+    from repro.configs import get_arch
+    from repro.fe import featureplan, get_spec
+    from repro.fe.datagen import gen_views
+
+    plan = featureplan.compile(get_spec(preset))
+    import dataclasses
+    cfg = dataclasses.replace(get_arch("dlrm-mlperf").smoke(),
+                              dedup_capacity=0)
+    mf = plan.model_feed(cfg, rows_hint=rows)
+    env = plan.run(gen_views(rows, seed=11))
+    return mf.config, mf.apply(mf.select(env))["sparse"]
+
+
+@pytest.mark.parametrize("preset", PRESETS)
+def test_lookup_dedup_bitwise_equals_lookup_on_presets(preset):
+    cfg, ids = _preset_batch_ids(preset)
+    mt = cfg.multi_table()
+    params = mt.init(jax.random.PRNGKey(1))
+    plain = lookup(params, mt.global_ids(ids))
+    dedup_rows = mt.lookup_dedup(params, ids, capacity=cfg.dedup_capacity)
+    assert plain.dtype == dedup_rows.dtype
+    # bitwise: the working-set path is gathers only, no arithmetic
+    np.testing.assert_array_equal(np.asarray(plain), np.asarray(dedup_rows))
+
+
+@pytest.mark.parametrize("preset", PRESETS)
+def test_sparse_grad_update_touches_only_working_set_on_presets(preset):
+    cfg, ids = _preset_batch_ids(preset)
+    mt = cfg.multi_table()
+    params = mt.init(jax.random.PRNGKey(2))
+    st_ = init_sparse_adagrad(mt.total_rows)
+    gids = np.asarray(mt.global_ids(ids)).reshape(-1)
+    grads = jnp.asarray(
+        RNG.normal(size=(gids.size, mt.dim)).astype(np.float32))
+    p2, st2 = sparse_grad_update(params, st_, jnp.asarray(gids), grads,
+                                 capacity=cfg.dedup_capacity)
+    working = set(np.unique(gids).tolist())
+    touched = np.where(np.abs(np.asarray(p2 - params)).sum(1) > 0)[0]
+    assert set(touched.tolist()) <= working
+    acc_touched = np.where(np.asarray(st2.accum) != np.asarray(st_.accum))[0]
+    assert set(acc_touched.tolist()) <= working
+    # every row outside the working set is bitwise untouched
+    outside = np.setdiff1d(np.arange(mt.total_rows), np.asarray(sorted(working)))
+    np.testing.assert_array_equal(np.asarray(p2)[outside],
+                                  np.asarray(params)[outside])
+
+
 def test_hierarchy_pull_push_and_cache():
     d = tempfile.mkdtemp()
     ps = HierarchicalPS(os.path.join(d, "t.bin"), total_rows=500, dim=4,

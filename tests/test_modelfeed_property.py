@@ -1,0 +1,74 @@
+"""Hypothesis property: ``ModelFeed.apply`` == the legacy eager adapter
+``fe_env_to_model_batch_ref`` **bitwise**, on random output layouts x arch
+configs, in both the packed and per-field (split) staged forms."""
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
+
+from repro.fe import modelfeed  # noqa: E402
+from repro.fe.compiler import OutputLayout  # noqa: E402
+from repro.fe.modelfeed import fe_env_to_model_batch_ref  # noqa: E402
+from repro.models.recsys import RecsysConfig  # noqa: E402
+from test_modelfeed import _assert_batches_equal, _split_env  # noqa: E402
+
+
+@st.composite
+def _layouts(draw):
+    return OutputLayout(
+        n_sparse_fields=draw(st.integers(1, 6)),
+        n_dense_feats=draw(st.integers(0, 5)),
+        seq_len=draw(st.sampled_from([0, 4, 10])),
+        field_size=draw(st.sampled_from([8, 64, 1024])),
+    )
+
+
+@st.composite
+def _arch_cfgs(draw):
+    kind = draw(st.sampled_from(["dlrm", "dcnv2", "autoint", "bst"]))
+    n_sparse = draw(st.integers(1, 7))
+    vocab = tuple(draw(st.lists(st.integers(2, 60), min_size=n_sparse,
+                                max_size=n_sparse)))
+    return RecsysConfig(
+        name="prop", kind=kind, n_sparse=n_sparse, vocab_sizes=vocab,
+        n_dense=(draw(st.integers(1, 4)) if kind != "bst"
+                 else draw(st.integers(0, 2))),
+        embed_dim=4,
+        seq_len=(draw(st.integers(1, 9)) if kind == "bst" else 0),
+    )
+
+
+def _env_for(layout: OutputLayout, rows: int, seed: int):
+    rng = np.random.default_rng(seed)
+    env = {
+        "batch_label": (rng.random(rows) < 0.3).astype(np.float32),
+        "batch_sparse": rng.integers(
+            0, layout.sparse_id_space,
+            (rows, layout.n_sparse_fields)).astype(np.int32),
+    }
+    if layout.n_dense_feats:
+        env["batch_dense"] = rng.exponential(
+            1.0, (rows, layout.n_dense_feats)).astype(np.float32)
+    if layout.seq_len:
+        env["batch_seq_ids"] = rng.integers(
+            0, layout.field_size, (rows, layout.seq_len)).astype(np.int32)
+        env["batch_seq_mask"] = np.ones((rows, layout.seq_len), np.float32)
+    return env
+
+
+@hypothesis.settings(max_examples=40, deadline=None)
+@hypothesis.given(layout=_layouts(), cfg=_arch_cfgs(),
+                  rows=st.integers(1, 48), seed=st.integers(0, 2**16))
+def test_apply_matches_ref_on_random_layouts_and_archs(layout, cfg, rows,
+                                                       seed):
+    env = _env_for(layout, rows, seed)
+    ref = fe_env_to_model_batch_ref(env, cfg)
+
+    mf = modelfeed.compile(layout, cfg)
+    _assert_batches_equal(ref, mf.apply(mf.select(env)), "packed ")
+
+    mfs = modelfeed.compile(layout, cfg, split_sparse_fields=True)
+    _assert_batches_equal(ref, mfs.apply(mfs.select(_split_env(env))),
+                          "split ")

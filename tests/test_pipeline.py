@@ -175,3 +175,66 @@ def test_pipelined_drain_seconds_zero():
     pipe = PipelinedRunner(layers, _train_step_factory(), prefetch=2)
     pipe.run({"sum": 0.0, "batches": 0}, [dict(b) for b in _batches(2)])
     assert pipe.stats.drain_seconds == 0.0
+
+
+# -------------------------------------------------------- train-feed tier
+def _adapting_step_factory(adapt_delay=0.0):
+    """Train step carrying modelfeed-style feed_stats: the runners must
+    adopt them into PipelineStats.train_feed and split adapt from train."""
+    import time
+
+    from repro.fe.modelfeed import TrainFeedStats
+
+    stats = TrainFeedStats()
+
+    def train_step(state, env):
+        t0 = time.perf_counter()
+        if adapt_delay:
+            time.sleep(adapt_delay)
+        stats.adapt_seconds += time.perf_counter() - t0
+        stats.steps += 1
+        stats.fused_steps += 1
+        return {"sum": state["sum"], "batches": state["batches"] + 1}
+
+    train_step.feed_stats = stats
+    return train_step
+
+
+def test_runners_adopt_train_feed_stats():
+    layers = compile_layers(build_schedule(build_fe_graph()))
+    for make in (
+        lambda s: PipelinedRunner(layers, s, prefetch=2),
+        lambda s: StagedRunner(layers, s, workdir=tempfile.mkdtemp()),
+    ):
+        step = _adapting_step_factory()
+        runner = make(step)
+        runner.run({"sum": 0.0, "batches": 0},
+                   [dict(b) for b in _batches(2, rows=32)])
+        assert runner.stats.train_feed is step.feed_stats
+        assert runner.stats.train_feed.steps == 2
+
+
+def test_train_feed_splits_adapt_from_train():
+    """The adapt share measured by the boundary step is split out of the
+    train bucket: train_net_seconds + adapt_seconds == train_seconds."""
+    delay = 0.05
+    layers = compile_layers(build_schedule(build_fe_graph()))
+    step = _adapting_step_factory(adapt_delay=delay)
+    runner = PipelinedRunner(layers, step, prefetch=2)
+    runner.run({"sum": 0.0, "batches": 0},
+               [dict(b) for b in _batches(3, rows=32)])
+    s = runner.stats
+    assert s.adapt_seconds >= 3 * delay * 0.9
+    assert s.train_net_seconds <= s.train_seconds - s.adapt_seconds + 1e-9
+    assert abs((s.train_net_seconds + s.adapt_seconds) - s.train_seconds) \
+        < 1e-6
+
+
+def test_train_feed_absent_without_feed_stats():
+    layers = compile_layers(build_schedule(build_fe_graph()))
+    runner = PipelinedRunner(layers, _train_step_factory(), prefetch=2)
+    runner.run({"sum": 0.0, "batches": 0},
+               [dict(b) for b in _batches(1, rows=16)])
+    assert runner.stats.train_feed is None
+    assert runner.stats.adapt_seconds == 0.0
+    assert runner.stats.train_net_seconds == runner.stats.train_seconds

@@ -1,8 +1,16 @@
-"""Runner-equivalence property test: for random small specs and batches,
+"""Runner-equivalence property tests: for random small specs and batches,
 ``PipelinedRunner`` — with and without the device-feed stage, with
 super-layer coalescing on and off, and with the direct-to-arena zero-copy
 feed — and ``StagedRunner`` all produce identical final state and
-identical per-slot outputs."""
+identical per-slot outputs.
+
+The second property extends this through the compiled train-feed boundary
+(:mod:`repro.fe.modelfeed`): Pipelined x {feed off/stage/arena} x {dedup
+on/off} == Staged, **bit-identical** adapted model batches and losses, on
+random specs x tiny arch configs.
+"""
+
+import dataclasses
 
 import numpy as np
 import pytest
@@ -109,3 +117,104 @@ def test_runners_equivalent_on_random_specs(spec, rows, n_batches, seed,
             for k in a:
                 assert a[k].dtype == b[k].dtype
                 np.testing.assert_array_equal(a[k], b[k])
+
+
+# ------------------------------------------- compiled train-feed boundary
+@st.composite
+def _tiny_archs(draw):
+    from repro.models.recsys import RecsysConfig
+    kind = draw(st.sampled_from(["dlrm", "dcnv2", "bst"]))
+    n_sparse = draw(st.integers(1, 4))
+    vocab = tuple(draw(st.lists(st.integers(3, 40), min_size=n_sparse,
+                                max_size=n_sparse)))
+    return RecsysConfig(
+        name="prop", kind=kind, n_sparse=n_sparse, vocab_sizes=vocab,
+        n_dense=(0 if kind == "bst" else draw(st.integers(1, 3))),
+        embed_dim=4, bot_mlp=(4,), top_mlp=(4, 1) if kind == "dlrm" else (4,),
+        seq_len=(draw(st.integers(1, 6)) if kind == "bst" else 0),
+        n_blocks=(1 if kind == "bst" else 0),
+        n_heads=(2 if kind == "bst" else 0),
+        n_cross_layers=(1 if kind == "dcnv2" else 0),
+    )
+
+
+def run_trainfeed_equivalence(spec, cfg, rows, n_batches, seed, workdir):
+    """Pipelined x {feed off/stage/arena} x {dedup on/off} == Staged, with
+    the spec->arch adaptation traced inside the step's jit (shared by the
+    hypothesis property below and a deterministic smoke run)."""
+    import jax
+
+    from repro.models import recsys as R
+
+    plan = featureplan.compile(spec)
+    batches = [gen_views(rows, seed=seed + i) for i in range(n_batches)]
+    feeds = {split: plan.model_feed(cfg, split_sparse_fields=split,
+                                    rows_hint=rows)
+             for split in (False, True)}
+    tuned = feeds[False].config  # dedup capacity sized from the rows hint
+    params = R.init_params(tuned, jax.random.PRNGKey(0))
+    cfg_on = dataclasses.replace(tuned, dedup_lookup=True)
+    cfg_off = dataclasses.replace(tuned, dedup_lookup=False)
+
+    def raw_step(p, opt_state, batch):
+        # dedup on/off computed side by side: the working-set lookup must
+        # be bit-identical to the plain gather through the full forward
+        metrics = {"loss": R.loss_fn(p, cfg_on, batch),
+                   "loss_nodedup": R.loss_fn(p, cfg_off, batch)}
+        metrics.update({f"adapted_{k}": v for k, v in batch.items()})
+        return p, opt_state, metrics
+
+    steps = {split: mf.make_step(raw_step, donate=False)
+             for split, mf in feeds.items()}
+
+    def recording(split):
+        boundary = steps[split]
+        seen = []
+
+        def fn(state, env):
+            _, _, m = boundary(params, None, env)
+            seen.append({k: np.asarray(v) for k, v in m.items()})
+            return {"batches": state["batches"] + 1}
+        return fn, seen
+
+    results = []
+    for split, make in (
+        (False, lambda s: PipelinedRunner(plan.layers, s, prefetch=2)),
+        (False, lambda s: PipelinedRunner(
+            plan.layers, s, prefetch=2,
+            device_feed=DeviceFeeder(plan.feed_layout(), rows_hint=rows))),
+        (True, lambda s: PipelinedRunner.from_plan(
+            plan, s, feed="arena", split_sparse_fields=True,
+            rows_hint=rows)),
+        (False, lambda s: StagedRunner(plan.layers, s, workdir=workdir)),
+    ):
+        fn, seen = recording(split)
+        runner = make(fn)
+        state = runner.run({"batches": 0}, [dict(b) for b in batches])
+        assert state["batches"] == n_batches
+        results.append(seen)
+
+    o0 = results[0]
+    for a in o0:  # dedup on == dedup off, through the whole forward
+        np.testing.assert_array_equal(a["loss"], a["loss_nodedup"])
+    for o in results[1:]:
+        assert len(o) == len(o0)
+        for a, b in zip(o0, o):
+            assert set(a) == set(b)
+            for k in a:
+                assert a[k].dtype == b[k].dtype, k
+                np.testing.assert_array_equal(a[k], b[k], err_msg=k)
+
+
+@hypothesis.settings(
+    max_examples=5, deadline=None,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow,
+                           hypothesis.HealthCheck.data_too_large])
+@hypothesis.given(spec=_small_specs(), cfg=_tiny_archs(),
+                  rows=st.integers(min_value=8, max_value=24),
+                  seed=st.integers(min_value=0, max_value=2**16))
+def test_trainfeed_runners_equivalent_on_random_specs(spec, cfg, rows, seed,
+                                                      tmp_path_factory):
+    run_trainfeed_equivalence(
+        spec, cfg, rows, n_batches=2, seed=seed,
+        workdir=str(tmp_path_factory.mktemp("staged_tf")))
