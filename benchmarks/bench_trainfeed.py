@@ -81,12 +81,20 @@ def boundary_rows() -> List[Dict]:
         float(m["loss"])
         dt = (time.perf_counter() - t0) / STEPS
         timings[label] = (dt, mf_.stats)
-        out.append({"name": f"trainfeed_step_{label}",
-                    "us_per_call": dt * 1e6,
-                    "derived": f"dispatches/step="
-                               f"{mf_.stats.dispatches_per_step:.1f} "
-                               f"adapt={mf_.stats.adapt_seconds * 1e6 / (STEPS + 1):.0f}"
-                               f"us/step"})
+        row = {"name": f"trainfeed_step_{label}",
+               "us_per_call": dt * 1e6,
+               "derived": f"dispatches/step="
+                          f"{mf_.stats.dispatches_per_step:.1f} "
+                          f"adapt={mf_.stats.adapt_seconds * 1e6 / (STEPS + 1):.0f}"
+                          f"us/step"}
+        if fused:
+            # Roofline columns for the one-dispatch boundary: loop-aware
+            # FLOPs / HBM bytes of the whole fused step (adapt + train).
+            from repro.launch.hlo_stats import step_cost
+            tot = step_cost(step.jitted, p, o, mf_.select(env))
+            row["flops"] = tot.flops
+            row["hbm_bytes"] = tot.bytes_tpu_corrected
+        out.append(row)
     fused_stats = timings["fused"][1]
     out.append({"name": "trainfeed_dispatches", "us_per_call": 0.0,
                 "gate": True, "metric": fused_stats.dispatches_per_step,

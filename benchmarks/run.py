@@ -22,7 +22,23 @@ gated row is compared on its ``metric`` value when it carries one
 dedup unique ratio) and on ``us_per_call`` otherwise, lower always
 better. CI's perf-smoke job runs the trainfeed comparison.
 
-Exits nonzero if any selected suite fails, so CI can gate on the run.
+With ``--json`` the comparison is also machine-readable: the report
+gains a ``compare`` object with one entry per row (``old``/``new``/
+``delta_pct``/``gated``/``verdict``) and a top-level ``verdict``, so CI
+annotations and dashboards read the gate outcome without parsing stderr.
+
+Rows may carry ``flops`` / ``hbm_bytes`` (per-call, from loop-aware HLO
+analysis — see ``repro.launch.hlo_stats``); these surface as the
+``gflops_per_call`` / ``hbm_mib_per_call`` CSV columns and ride along in
+the JSON payload for roofline-style comparisons across PRs.
+
+Exit-code contract (what CI keys off):
+
+* **0** — every selected suite ran; no gated row regressed.
+* **1** — at least one suite raised (broken benchmark or library code).
+  Takes precedence over 2: a failed suite can hide a regression.
+* **2** — all suites ran, but a gated row regressed beyond the margin
+  (or a gated baseline row went missing from this run).
 """
 
 from __future__ import annotations
@@ -44,20 +60,29 @@ def _gate_value(row) -> float:
     return float(row["us_per_call"])
 
 
-def compare_to_baseline(report, baseline_path: str) -> int:
-    """Print per-row deltas vs a committed baseline; count gated regressions."""
+def compare_to_baseline(report, baseline_path: str) -> dict:
+    """Per-row deltas vs a committed baseline, as a structured payload.
+
+    Prints the human-readable comparison to stderr (unchanged format) and
+    returns the machine-readable ``compare`` object ``main`` attaches to
+    the ``--json`` report: ``{"baseline", "margin", "rows": [{"name",
+    "old", "new", "delta_pct", "gated", "verdict"}], "regressions",
+    "verdict"}``. Row verdicts: ``ok`` / ``regressed`` (gated, beyond the
+    margin) / ``new`` (no baseline row) / ``missing`` (gated baseline row
+    absent from this run — a gate failure, otherwise deleting a row would
+    silently disable its check). Top-level ``verdict`` is ``ok`` or
+    ``regressed``.
+    """
     with open(baseline_path) as f:
         base = json.load(f)
     base_rows = {r["name"]: r
                  for s in base.get("suites", {}).values()
                  for r in s.get("rows", [])}
     regressions = []
+    cmp_rows = []
     print(f"--- compare vs {baseline_path} " + "-" * 30, file=sys.stderr)
     seen = {r["name"] for s in report["suites"].values()
             for r in s.get("rows", [])}
-    # A gated baseline row that vanished (renamed, dropped, or no longer
-    # flagged) is itself a gate failure — otherwise deleting the row
-    # silently disables the regression check.
     for suite_name, s in base.get("suites", {}).items():
         if suite_name not in report["suites"]:
             continue  # baseline covers suites the current selection skipped
@@ -66,30 +91,43 @@ def compare_to_baseline(report, baseline_path: str) -> int:
                 print(f"{r['name']}: gated baseline row MISSING from this "
                       f"run", file=sys.stderr)
                 regressions.append(f"{r['name']} (missing)")
+                cmp_rows.append({"name": r["name"], "old": _gate_value(r),
+                                 "new": None, "delta_pct": None,
+                                 "gated": True, "verdict": "missing"})
     for suite in report["suites"].values():
         for row in suite.get("rows", []):
             old = base_rows.get(row["name"])
+            gated = bool(row.get("gate"))
             if old is None:
                 print(f"{row['name']}: new row (no baseline)", file=sys.stderr)
+                cmp_rows.append({"name": row["name"], "old": None,
+                                 "new": _gate_value(row), "delta_pct": None,
+                                 "gated": gated, "verdict": "new"})
                 continue
             new_v, old_v = _gate_value(row), _gate_value(old)
-            gated = bool(row.get("gate"))
             if old_v <= 0:
                 delta = "n/a" if new_v <= 0 else "+inf"
+                delta_pct = None
                 bad = gated and new_v > 0
             else:
                 ratio = new_v / old_v
-                delta = f"{(ratio - 1) * 100:+.1f}%"
+                delta_pct = round((ratio - 1) * 100, 1)
+                delta = f"{delta_pct:+.1f}%"
                 bad = gated and ratio > REGRESSION_MARGIN
             mark = " GATE-REGRESSED" if bad else (" [gated]" if gated else "")
             print(f"{row['name']}: {old_v:g} -> {new_v:g} ({delta}){mark}",
                   file=sys.stderr)
+            cmp_rows.append({"name": row["name"], "old": old_v, "new": new_v,
+                             "delta_pct": delta_pct, "gated": gated,
+                             "verdict": "regressed" if bad else "ok"})
             if bad:
                 regressions.append(row["name"])
     if regressions:
         print(f"gated rows regressed >{(REGRESSION_MARGIN - 1) * 100:.0f}%: "
               f"{', '.join(regressions)}", file=sys.stderr)
-    return len(regressions)
+    return {"baseline": baseline_path, "margin": REGRESSION_MARGIN,
+            "rows": cmp_rows, "regressions": regressions,
+            "verdict": "regressed" if regressions else "ok"}
 
 
 def main() -> None:
@@ -125,7 +163,7 @@ def main() -> None:
         for name, _ in suites:
             print(name)
         return
-    print("name,us_per_call,derived")
+    print("name,us_per_call,derived,gflops_per_call,hbm_mib_per_call")
     failed = []
     report = {"suites": {}, "python": platform.python_version(),
               "machine": platform.machine()}
@@ -136,7 +174,12 @@ def main() -> None:
             rows = list(fn())
             for row in rows:
                 derived = str(row.get("derived", "")).replace(",", ";")
-                print(f"{row['name']},{row['us_per_call']:.2f},{derived}")
+                gflops = (f"{row['flops'] / 1e9:.3f}"
+                          if row.get("flops") is not None else "")
+                hbm = (f"{row['hbm_bytes'] / 2**20:.1f}"
+                       if row.get("hbm_bytes") is not None else "")
+                print(f"{row['name']},{row['us_per_call']:.2f},{derived},"
+                      f"{gflops},{hbm}")
             out_rows = []
             for r in rows:
                 out = {"name": r["name"],
@@ -146,24 +189,29 @@ def main() -> None:
                     out["gate"] = True
                 if r.get("metric") is not None:
                     out["metric"] = float(r["metric"])
+                for k in ("flops", "hbm_bytes"):
+                    if r.get(k) is not None:
+                        out[k] = float(r[k])
                 out_rows.append(out)
             report["suites"][name] = {"rows": out_rows}
         except Exception:
             failed.append(name)
             traceback.print_exc()
-            print(f"{name},NaN,SUITE FAILED")
+            print(f"{name},NaN,SUITE FAILED,,")
             report["suites"][name] = {"failed": True}
+    compare = (compare_to_baseline(report, args.compare)
+               if args.compare else None)
+    if compare is not None:
+        report["compare"] = compare
     if args.json:
         with open(args.json, "w") as f:
             json.dump(report, f, indent=2)
             f.write("\n")
         print(f"wrote {args.json}", file=sys.stderr)
-    n_regressed = (compare_to_baseline(report, args.compare)
-                   if args.compare else 0)
     if failed:
         print(f"FAILED suites: {', '.join(failed)}", file=sys.stderr)
         sys.exit(1)
-    if n_regressed:
+    if compare is not None and compare["regressions"]:
         sys.exit(2)
 
 

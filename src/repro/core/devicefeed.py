@@ -54,6 +54,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.mempool import ALIGN, Allocation, ArenaPool, align_up, plan_offsets
+from repro.obs.metrics import harvest
+from repro.obs.trace import get_tracer
 
 
 @dataclasses.dataclass(frozen=True)
@@ -155,6 +157,10 @@ class FeedStats:
     @property
     def h2d_bytes_per_second(self) -> float:
         return self.bytes_staged / max(self.h2d_seconds, 1e-9)
+
+    def as_metrics(self) -> Dict[str, float]:
+        """Flat numeric snapshot for :class:`repro.obs.MetricsRegistry`."""
+        return harvest(self)
 
     def summary(self) -> str:
         return (f"batches={self.batches} "
@@ -281,6 +287,8 @@ class DeviceFeeder:
                 return
             self.stats.reallocs += 1
             self._rewinds_prior += self.pool.n_resets
+            get_tracer().instant("arena.regrow", old=self.pool.capacity,
+                                 new=need)
         self.pool = ArenaPool(need, align=self.layout.align)
         with self._lock:
             # Transfers from the old buffers may still be in flight; jax
@@ -328,6 +336,8 @@ class DeviceFeeder:
         happens at consumer *dispatch*, i.e. possibly before that step's
         fence is registered; the sequence wait (not just "latest fence")
         closes that window."""
+        tracer = get_tracer()
+        w0 = tracer.now_ns() if tracer.enabled else 0
         donated = 0
         t0 = time.perf_counter()
         for dev in pending:
@@ -348,6 +358,13 @@ class DeviceFeeder:
             if fence is not None and not _deleted(fence):
                 fence.block_until_ready()
         self.stats.stall_seconds += time.perf_counter() - t0
+        if tracer.enabled:
+            w1 = tracer.now_ns()
+            if w1 - w0 > 100_000:  # record real waits only (>0.1 ms):
+                # the ring slot could not be rewritten until its in-flight
+                # transfers (or the donating consumer's fence) completed
+                tracer.complete("h2d.reclaim_stall", w0, w1,
+                                pending=len(pending), donated=donated)
 
     def _await_donation_fence(self, seq: int) -> Optional[jax.Array]:
         """Wait until the consumer of the ``seq``-th staged batch has
@@ -381,6 +398,7 @@ class DeviceFeeder:
             self._fence = fence
             self._consumed_seq += 1
             self._fence_cond.notify_all()
+        get_tracer().instant("h2d.donation_fence", seq=self._consumed_seq)
 
     # --------------------------------------------------------------- staging
     def _rows(self, env: Mapping[str, Any]) -> int:
@@ -449,6 +467,7 @@ class DeviceFeeder:
         b = self._claim_buffer()
         # Alg. 1 per meta-batch: O(1) rewind, then one block allocation.
         self.pool.reset()
+        get_tracer().instant("arena.rewind", buffer=b)
         allocs = self.pool.alloc_block(self.layout.sizes(rows))
         self.last_allocs = allocs
         buf = self._host[b]
@@ -482,6 +501,11 @@ class DeviceFeeder:
         Returns the environment with the layout's slots replaced by device
         arrays (bitwise-equal values); all other slots pass through.
         """
+        with get_tracer().span("h2d.stage", batch=self.stats.batches):
+            return self._stage(env, claim)
+
+    def _stage(self, env: Mapping[str, Any],
+               claim: Optional[ArenaClaim]) -> Dict[str, Any]:
         if claim is None and self.binding is not None \
                 and self.binding.ready(env):
             return self._stage_direct(env)

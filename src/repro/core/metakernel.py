@@ -40,6 +40,8 @@ import jax
 
 from repro.core.opgraph import Device
 from repro.core.scheduler import Layer, PlacedOp, Schedule
+from repro.obs.metrics import harvest
+from repro.obs.trace import NULL_SPAN, get_tracer
 
 
 @dataclasses.dataclass
@@ -154,6 +156,10 @@ class ExecutionStats:
         """Schedule layers folded into an already-dispatched super-layer."""
         return self.n_source_layers - self.n_layers
 
+    def as_metrics(self) -> Dict[str, float]:
+        """Flat numeric snapshot for :class:`repro.obs.MetricsRegistry`."""
+        return harvest(self)
+
 
 def run_layers(
     layers: List[LayerExecutable],
@@ -168,23 +174,32 @@ def run_layers(
     run, their outputs are device_put (H2D), then the single fused device
     dispatch for layer i runs; only then does layer i+1 start.
     """
+    tracer = get_tracer()
     for layer in layers:
-        t0 = time.perf_counter()
-        for placed in layer.host_ops:
-            kwargs = {s: env[s] for s in placed.op.inputs}
-            res = placed.op.fn(**kwargs)
-            for slot in placed.op.outputs:
-                val = res[slot]
-                # Explicit H2D move of host-op results (paper: CPU op output
-                # copied to GPU as a host-to-device CUDA call).
-                if device is not None and hasattr(val, "shape"):
-                    val = jax.device_put(val, device)
-                env[slot] = val
-        t1 = time.perf_counter()
-        if layer.fused_fn is not None:
-            out = layer.fused_fn({s: env[s] for s in layer.device_input_slots})
-            env.update(out)
-        t2 = time.perf_counter()
+        # Span args are only materialized when tracing is on, keeping the
+        # disabled hot path at one flag check per layer.
+        span = (tracer.span("fe.layer", layer=layer.index,
+                            host_ops=len(layer.host_ops),
+                            dispatches=layer.n_dispatches)
+                if tracer.enabled else NULL_SPAN)
+        with span:
+            t0 = time.perf_counter()
+            for placed in layer.host_ops:
+                kwargs = {s: env[s] for s in placed.op.inputs}
+                res = placed.op.fn(**kwargs)
+                for slot in placed.op.outputs:
+                    val = res[slot]
+                    # Explicit H2D move of host-op results (paper: CPU op
+                    # output copied to GPU as a host-to-device CUDA call).
+                    if device is not None and hasattr(val, "shape"):
+                        val = jax.device_put(val, device)
+                    env[slot] = val
+            t1 = time.perf_counter()
+            if layer.fused_fn is not None:
+                out = layer.fused_fn(
+                    {s: env[s] for s in layer.device_input_slots})
+                env.update(out)
+            t2 = time.perf_counter()
         if stats is not None:
             stats.n_layers += 1
             stats.n_source_layers += layer.n_source_layers

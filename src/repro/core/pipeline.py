@@ -39,6 +39,8 @@ import numpy as np
 
 from repro.core.devicefeed import DeviceFeeder
 from repro.core.metakernel import ExecutionStats, LayerExecutable, run_layers
+from repro.obs.metrics import harvest
+from repro.obs.trace import get_tracer
 
 # Sentinel for end-of-stream in the prefetch queue.
 _DONE = object()
@@ -79,6 +81,48 @@ class PipelineStats:
     def train_net_seconds(self) -> float:
         """train_seconds with the measurable adapt share split out."""
         return max(self.train_seconds - self.adapt_seconds, 0.0)
+
+    # ------------------------------------------------- derived accounting
+    # The accounting identity both runners satisfy (asserted in
+    # tests/test_pipeline.py):
+    #     wall <= fe + train_net + adapt + drain + overhead
+    # with equality for the serial (Staged) runner, overhead >= 0 always,
+    # and the pipelined runner's surplus busy time showing up as overlap.
+
+    @property
+    def busy_seconds(self) -> float:
+        """Stage time summed across threads: fe + train + drain. Exceeds
+        wall exactly when pipelining hid stage time behind another stage."""
+        return self.fe_seconds + self.train_seconds + self.drain_seconds
+
+    @property
+    def overhead_seconds(self) -> float:
+        """Wall time no stage accounts for (queue waits, thread startup,
+        end-of-stream drain). Never negative: when stages overlap, busy
+        time can exceed wall and the residual is overlap, not overhead."""
+        return max(self.wall_seconds - self.busy_seconds, 0.0)
+
+    @property
+    def overlap_seconds(self) -> float:
+        """Stage seconds hidden by pipelining (busy time beyond wall)."""
+        return max(self.busy_seconds - self.wall_seconds, 0.0)
+
+    @property
+    def overlap_fraction(self) -> float:
+        """How much of the smaller stage (FE vs train) was hidden behind
+        the other, in [0, 1]. 0 = fully serial; 1 = the cheaper stage ran
+        entirely in the other's shadow — the paper's pipelining claim as
+        one number."""
+        denom = min(self.fe_seconds, self.train_seconds)
+        if denom <= 0.0:
+            return 0.0
+        return min(self.overlap_seconds / denom, 1.0)
+
+    def as_metrics(self) -> Dict[str, float]:
+        """Flat numeric snapshot (fields + derived properties) for the
+        :class:`repro.obs.MetricsRegistry`; nested tiers register
+        themselves separately."""
+        return harvest(self)
 
 
 def _capture_ingest(stats: PipelineStats, batches: Any) -> None:
@@ -169,17 +213,20 @@ class PipelinedRunner:
 
     def _fe_worker(self, batches: Iterator[Mapping[str, Any]],
                    q: "queue.Queue", stop: threading.Event) -> None:
+        tracer = get_tracer()
         try:
-            for raw in batches:
+            for bi, raw in enumerate(batches):
                 if stop.is_set():  # consumer died: don't extract the rest
                     break
                 t0 = time.perf_counter()
-                env = dict(raw)
-                run_layers(self.layers, env, device=self.device,
-                           stats=self.stats.exec_stats)
+                with tracer.span("fe.extract", batch=bi):
+                    env = dict(raw)
+                    run_layers(self.layers, env, device=self.device,
+                               stats=self.stats.exec_stats)
                 self.stats.fe_seconds += time.perf_counter() - t0
                 self._put(q, env, stop)
         except BaseException as e:  # surface worker failures to the consumer
+            tracer.instant("fe.error", kind=type(e).__name__)
             self._put(q, e, stop)
         finally:
             self._put(q, _DONE, stop)
@@ -248,15 +295,27 @@ class PipelinedRunner:
             out_q = feed_q
         for t in threads:
             t.start()
+        tracer = get_tracer()
         try:
             while True:
-                item = out_q.get()
+                if tracer.enabled:
+                    # Record the wait for the next extracted/staged batch
+                    # only when it actually stalled the train loop: the
+                    # gap is the pipeline's backpressure signal.
+                    w0 = tracer.now_ns()
+                    item = out_q.get()
+                    w1 = tracer.now_ns()
+                    if w1 - w0 > 100_000:  # >0.1 ms
+                        tracer.complete("train.wait_batch", w0, w1)
+                else:
+                    item = out_q.get()
                 if item is _DONE:
                     break
                 if isinstance(item, BaseException):
                     raise item
                 t0 = time.perf_counter()
-                state = self.train_step(state, item)
+                with tracer.span("train.step", batch=self.stats.batches):
+                    state = self.train_step(state, item)
                 self.stats.train_seconds += time.perf_counter() - t0
                 self.stats.batches += 1
                 # Release the env before blocking on the next get so batch
@@ -339,11 +398,13 @@ class StagedRunner:
         return np.load(path, allow_pickle=True)
 
     def run(self, state: Any, batches: Iterable[Mapping[str, Any]]) -> Any:
+        tracer = get_tracer()
         t_start = time.perf_counter()
         # A StreamingLoader source is drained up front: the staged baseline
         # by definition has no read/compute overlap. That read time is its
         # own accounting bucket (drain_seconds), not fe/train overhead.
-        all_batches = list(batches)
+        with tracer.span("staged.drain"):
+            all_batches = list(batches)
         self.stats.drain_seconds = time.perf_counter() - t_start
         _capture_ingest(self.stats, batches)
         # Stage-after-stage: run *every* batch through layer k, materialize,
@@ -351,14 +412,16 @@ class StagedRunner:
         envs: List[Dict[str, Any]] = [dict(b) for b in all_batches]
         for li, layer in enumerate(self.layers):
             t0 = time.perf_counter()
-            for bi, env in enumerate(envs):
-                run_layers([layer], env, device=self.device,
-                           stats=self.stats.exec_stats)
-                envs[bi] = self._materialize(env, li, bi)
+            with tracer.span("fe.stage", layer=li, batches=len(envs)):
+                for bi, env in enumerate(envs):
+                    run_layers([layer], env, device=self.device,
+                               stats=self.stats.exec_stats)
+                    envs[bi] = self._materialize(env, li, bi)
             self.stats.fe_seconds += time.perf_counter() - t0
-        for env in envs:
+        for bi, env in enumerate(envs):
             t0 = time.perf_counter()
-            state = self.train_step(state, env)
+            with tracer.span("train.step", batch=bi):
+                state = self.train_step(state, env)
             self.stats.train_seconds += time.perf_counter() - t0
             self.stats.batches += 1
         self.stats.wall_seconds = time.perf_counter() - t_start

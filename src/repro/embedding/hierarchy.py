@@ -23,6 +23,7 @@ from typing import Dict, Optional, Tuple
 import numpy as np
 
 from repro.embedding.dedup import dedup_np
+from repro.obs.metrics import harvest
 
 
 @dataclasses.dataclass
@@ -33,6 +34,16 @@ class TierStats:
     pushes: int = 0
     pulled_rows: int = 0
     pushed_rows: int = 0
+    evictions: int = 0
+
+    @property
+    def host_hit_rate(self) -> float:
+        """Fraction of working-set row lookups served from host DRAM."""
+        return self.host_hits / max(self.host_hits + self.ssd_reads, 1)
+
+    def as_metrics(self) -> Dict[str, float]:
+        """Flat numeric snapshot for :class:`repro.obs.MetricsRegistry`."""
+        return harvest(self)
 
 
 class HierarchicalPS:
@@ -124,6 +135,7 @@ class HierarchicalPS:
         self._host.move_to_end(rid)
         while len(self._host) > self.host_cache_rows:
             self._host.popitem(last=False)  # evict LRU
+            self.stats.evictions += 1
 
     @property
     def host_cache_size(self) -> int:

@@ -50,6 +50,8 @@ import numpy as np
 
 from repro.embedding.dedup import expected_unique
 from repro.fe.compiler import OutputLayout, field_slot, field_slots
+from repro.obs.metrics import harvest
+from repro.obs.trace import get_tracer
 
 _DONATE_MSG = "Some donated buffers were not usable"
 
@@ -164,6 +166,10 @@ class TrainFeedStats:
         """unique ids / referenced ids — the dedup win ([37]: collective
         traffic is proportional to this, not to batch x fields)."""
         return self.unique_ids / max(self.total_ids, 1)
+
+    def as_metrics(self) -> Dict[str, float]:
+        """Flat numeric snapshot for :class:`repro.obs.MetricsRegistry`."""
+        return harvest(self)
 
     def summary(self) -> str:
         return (f"steps={self.steps} (fused={self.fused_steps}) "
@@ -298,6 +304,8 @@ class ModelFeed:
         stats = self.stats
 
         def step(params, opt_state, env):
+            tracer = get_tracer()
+            w0 = tracer.now_ns() if tracer.enabled else 0
             t0 = time.perf_counter()
             feed = self.select(env)
             if fused:
@@ -306,6 +314,9 @@ class ModelFeed:
                 stats.adapt_dispatches += self.eager_adapt_ops(feed)
                 feed = self.apply(feed)  # eager: each op its own dispatch
             stats.adapt_seconds += time.perf_counter() - t0
+            if tracer.enabled:
+                tracer.complete("train.adapt", w0, tracer.now_ns(),
+                                fused=fused)
             with warnings.catch_warnings():
                 if donate:
                     # The staged batch rarely aliases an output shape; the
@@ -326,6 +337,10 @@ class ModelFeed:
             return new_params, new_opt, metrics
 
         step.feed_stats = stats
+        # Expose the underlying jit so drivers/benchmarks can lower it for
+        # HLO cost analysis (repro.launch.hlo_stats.step_cost) without
+        # re-deriving the boundary function.
+        step.jitted = jitted
         return step
 
     def _record(self, metrics: Mapping[str, Any]) -> None:

@@ -30,6 +30,8 @@ from typing import Any, Callable, Dict, Iterator, List, Mapping, Optional, Seque
 
 from repro.io.dataset import ShardDataset, ShardInfo
 from repro.io.shardfmt import ShardReader
+from repro.obs.metrics import harvest
+from repro.obs.trace import get_tracer
 
 _WORKER_DONE = object()
 
@@ -63,6 +65,10 @@ class IngestStats:
     def wall_bytes_per_second(self) -> float:
         """End-to-end ingest throughput as the consumer observed it."""
         return self.bytes_read / max(self.wall_seconds, 1e-9)
+
+    def as_metrics(self) -> "dict":
+        """Flat numeric snapshot for :class:`repro.obs.MetricsRegistry`."""
+        return harvest(self)
 
     def summary(self) -> str:
         return (f"shards={self.shards} bytes={self.bytes_read/2**20:.1f}MiB "
@@ -171,6 +177,7 @@ class StreamingLoader:
         return plan
 
     def _reader(self, work: "queue.Queue", out: "queue.Queue") -> None:
+        tracer = get_tracer()
         info: Optional[ShardInfo] = None
         try:
             while not self._stop.is_set():
@@ -179,10 +186,11 @@ class StreamingLoader:
                 except queue.Empty:
                     break
                 t0 = time.perf_counter()
-                reader = ShardReader(info.path, verify=self.verify)
-                env = reader.read_all(self.columns)
-                if self.transform is not None:
-                    env = self.transform(env, info)
+                with tracer.span("io.read_shard", seq=info.seq):
+                    reader = ShardReader(info.path, verify=self.verify)
+                    env = reader.read_all(self.columns)
+                    if self.transform is not None:
+                        env = self.transform(env, info)
                 dt = time.perf_counter() - t0
                 with self._lock:
                     self.stats.shards += 1
@@ -203,6 +211,8 @@ class StreamingLoader:
         After close() the consumer is gone, so every put (sentinels
         included) aborts rather than spinning on a full queue.
         """
+        tracer = get_tracer()
+        w0 = tracer.now_ns() if tracer.enabled else 0
         t0 = time.perf_counter()
         while True:
             try:
@@ -215,6 +225,10 @@ class StreamingLoader:
         if stall > 1e-4 and not force:
             with self._lock:
                 self.stats.reader_stall_seconds += stall
+            if tracer.enabled:
+                # Reader blocked on a full queue: the consumer (FE/train)
+                # is the bottleneck over this window.
+                tracer.complete("io.backpressure", w0, tracer.now_ns())
 
     # ------------------------------------------------------------ iteration
     def __iter__(self) -> Iterator[Dict[str, Any]]:
@@ -243,16 +257,23 @@ class StreamingLoader:
         t_start = time.perf_counter()
         for t in self._threads:
             t.start()
+        tracer = get_tracer()
         done = 0
         try:
             while done < n_workers:
+                w0 = tracer.now_ns() if tracer.enabled else 0
                 t0 = time.perf_counter()
                 item = out.get()
                 stall = time.perf_counter() - t0
                 if stall > 1e-4:
                     self.stats.consumer_stall_seconds += stall
+                    if tracer.enabled:
+                        # Consumer blocked on an empty queue: the disk /
+                        # decode side is the bottleneck over this window.
+                        tracer.complete("io.wait_shard", w0, tracer.now_ns())
                 self.stats.max_queue_depth = max(self.stats.max_queue_depth,
                                                  out.qsize() + 1)
+                tracer.counter("io.queue_depth", out.qsize() + 1)
                 if item is _WORKER_DONE:
                     done += 1
                     continue

@@ -24,6 +24,8 @@ import json
 import re
 from typing import Dict, List, Optional, Tuple
 
+from repro.obs.metrics import harvest
+
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
     "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
@@ -115,6 +117,52 @@ class Totals:
     @property
     def bytes_tpu_corrected(self) -> float:
         return self.bytes - self.artifact_bytes
+
+    def as_metrics(self) -> Dict[str, float]:
+        """Flat numeric snapshot for :class:`repro.obs.MetricsRegistry`.
+
+        The per-kind ``collective`` dict is summarized by the
+        ``collective_total`` property; kind breakdown stays on the object.
+        """
+        return harvest(self)
+
+
+def abstractify(tree):
+    """Map a pytree of arrays/scalars to ``ShapeDtypeStruct`` leaves.
+
+    No data is read and no transfers happen — device arrays contribute only
+    their (shape, dtype), so this is safe to call on live training state.
+    """
+    import jax
+    import numpy as np
+
+    def _one(x):
+        if isinstance(x, jax.ShapeDtypeStruct):
+            return x
+        if hasattr(x, "shape") and hasattr(x, "dtype"):
+            return jax.ShapeDtypeStruct(x.shape, x.dtype)
+        a = np.asarray(x)
+        return jax.ShapeDtypeStruct(a.shape, a.dtype)
+
+    return jax.tree_util.tree_map(_one, tree)
+
+
+def step_cost(fn, *args) -> Totals:
+    """Loop-aware per-call cost of ``fn`` on arguments shaped like ``args``.
+
+    Lowers on :func:`abstractify`'d arguments (no execution; donation is a
+    no-op on abstract values), compiles, and runs :func:`analyze_hlo` on
+    the optimized HLO text. ``fn`` may be a ``jax.jit`` wrapper (e.g. the
+    ``step.jitted`` attached by :meth:`repro.fe.modelfeed.ModelFeed.
+    make_step`) or a plain traceable callable. Costs one extra compile —
+    callers should gate it behind an opt-in flag (``--metrics``).
+    """
+    import jax
+
+    shaped = abstractify(args)
+    jitted = fn if hasattr(fn, "lower") else jax.jit(fn)
+    compiled = jitted.lower(*shaped).compile()
+    return analyze_hlo(compiled.as_text())
 
 
 def _split_computations(text: str) -> Dict[str, List[str]]:

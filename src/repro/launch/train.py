@@ -158,8 +158,18 @@ def run_streaming(args, spec, cfg, state, opt) -> None:
         fence_cb=(feeder.donation_fence if feeder is not None else None))
 
     losses = []
+    cost_args = []  # (params, opt, feed) ShapeDtypeStructs for --metrics
 
     def step_fn(state, env):
+        if args.metrics and not cost_args:
+            # Shapes only (no data, no transfers): enough to lower the
+            # boundary jit for HLO cost analysis after the run.
+            from repro.launch.hlo_stats import abstractify
+            feed = abstractify(mf.select(env))
+            if args.adapt == "eager":
+                feed = jax.eval_shape(mf.apply, feed)
+            p, o = abstractify((state["params"], state["opt"]))
+            cost_args.append((p, o, feed))
         p, o, m = fused(state["params"], state["opt"], env)
         losses.append(float(m["loss"]))
         state = {"params": p, "opt": o}
@@ -203,6 +213,25 @@ def run_streaming(args, spec, cfg, state, opt) -> None:
     if s.train_feed is not None:
         print(f"train-feed: {s.train_feed.summary()} "
               f"(capacity={cfg.dedup_capacity})")
+    if args.metrics:
+        from repro.launch.hlo_stats import step_cost
+        from repro.obs import MetricsRegistry
+        reg = MetricsRegistry.from_pipeline(s)
+        if cost_args:
+            tot = step_cost(fused.jitted, *cost_args[0])
+            reg.register("hlo", tot)
+            _print_hlo_cost(tot)
+        print("metrics:")
+        print(reg.to_json())
+
+
+def _print_hlo_cost(tot) -> None:
+    """Roofline-style per-step summary from loop-aware HLO analysis."""
+    print(f"hlo/step: {tot.flops/1e9:.3f} GFLOP "
+          f"hbm={tot.bytes/2**20:.1f}MiB "
+          f"(tpu-corrected {tot.bytes_tpu_corrected/2**20:.1f}MiB) "
+          f"collective={tot.collective_total/2**20:.1f}MiB "
+          f"intensity={tot.flops/max(tot.bytes, 1.0):.2f} flop/byte")
 
 
 def main() -> None:
@@ -243,8 +272,34 @@ def main() -> None:
     ap.add_argument("--stream-prefetch", type=int, default=4)
     ap.add_argument("--host-id", type=int, default=0)
     ap.add_argument("--n-hosts", type=int, default=1)
+    # observability (repro.obs)
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="export a Chrome trace-event / Perfetto timeline "
+                         "of the run to PATH: loader readers, FE worker, "
+                         "H2D feeder, and train loop as separate tracks "
+                         "(open in ui.perfetto.dev or chrome://tracing)")
+    ap.add_argument("--metrics", action="store_true",
+                    help="print the consolidated repro.obs.MetricsRegistry "
+                         "snapshot (JSON) plus per-step HLO FLOPs / "
+                         "HBM-bytes at exit (the HLO analysis costs one "
+                         "extra compile)")
     args = ap.parse_args()
 
+    if args.trace:
+        from repro.obs.trace import enable_tracing
+        enable_tracing()
+    try:
+        _run(args)
+    finally:
+        if args.trace:
+            from repro.obs.trace import get_tracer
+            tracer = get_tracer()
+            out = tracer.export(args.trace)
+            print(f"trace: {len(out['traceEvents'])} events on "
+                  f"{len(tracer.track_names())} tracks -> {args.trace}")
+
+
+def _run(args) -> None:
     spec = get_arch(args.arch)
     cfg = spec.smoke()
     key = jax.random.PRNGKey(0)
@@ -296,6 +351,17 @@ def main() -> None:
     print(f"arch={args.arch} steps={stats.steps} "
           f"loss {stats.losses[0]:.4f} -> {stats.losses[-1]:.4f} "
           f"({dt:.1f}s, {dt/max(stats.steps,1)*1e3:.1f} ms/step)")
+    if args.metrics:
+        from repro.launch.hlo_stats import step_cost
+        from repro.obs import MetricsRegistry
+        reg = MetricsRegistry()
+        reg.register("loop", stats)
+        tot = step_cost(train_step, state["params"], state["opt"],
+                        synthetic_batch(spec.family, cfg, args.batch, 0))
+        reg.register("hlo", tot)
+        _print_hlo_cost(tot)
+        print("metrics:")
+        print(reg.to_json())
     assert stats.losses[-1] < stats.losses[0], "training must reduce loss"
 
 

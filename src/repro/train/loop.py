@@ -20,6 +20,8 @@ import numpy as np
 
 from repro.core.metakernel import LayerExecutable, run_layers
 from repro.core.pipeline import PipelinedRunner
+from repro.obs.metrics import harvest
+from repro.obs.trace import NULL_SPAN, get_tracer
 from repro.train.checkpoint import CheckpointManager
 from repro.train.fault import ShardServer, StragglerPolicy
 
@@ -40,6 +42,10 @@ class LoopStats:
     losses: List[float] = dataclasses.field(default_factory=list)
     fe_seconds: float = 0.0
     train_seconds: float = 0.0
+
+    def as_metrics(self) -> Dict[str, float]:
+        """Flat numeric snapshot for :class:`repro.obs.MetricsRegistry`."""
+        return harvest(self)
 
 
 def run_training(
@@ -71,13 +77,18 @@ def run_training(
             start_step += 1
             stats.restarts += 1
 
+    tracer = get_tracer()
     for step in range(start_step, cfg.n_steps):
         t0 = time.perf_counter()
-        batch = dict(batch_source(step))
-        if fe_layers is not None:
-            batch = run_layers(fe_layers, batch)
+        with (tracer.span("fe.batch", step=step)
+              if tracer.enabled else NULL_SPAN):
+            batch = dict(batch_source(step))
+            if fe_layers is not None:
+                batch = run_layers(fe_layers, batch)
         t1 = time.perf_counter()
-        state, metrics = train_step(state, batch)
+        with (tracer.span("train.step", step=step)
+              if tracer.enabled else NULL_SPAN):
+            state, metrics = train_step(state, batch)
         t2 = time.perf_counter()
         stats.fe_seconds += t1 - t0
         stats.train_seconds += t2 - t1

@@ -238,3 +238,85 @@ def test_train_feed_absent_without_feed_stats():
     assert runner.stats.train_feed is None
     assert runner.stats.adapt_seconds == 0.0
     assert runner.stats.train_net_seconds == runner.stats.train_seconds
+
+
+# ------------------------------------------- derived accounting invariants
+def test_accounting_identity_exact_arithmetic():
+    """overhead/overlap are exact complements of wall - busy: overhead is
+    never negative, at most one of the two is nonzero, and
+    wall == busy + overhead - overlap holds to float precision."""
+    from repro.core.pipeline import PipelineStats
+
+    cases = [
+        # (fe, train, drain, wall)
+        (1.0, 2.0, 0.0, 3.5),   # serial-ish: overhead 0.5
+        (1.0, 2.0, 0.0, 2.4),   # pipelined: overlap 0.6
+        (1.0, 2.0, 0.5, 3.5),   # exact: overhead == overlap == 0
+        (0.0, 0.0, 0.0, 0.0),   # empty run
+        (0.3, 5.0, 0.0, 5.05),  # train-bound
+    ]
+    for fe, train, drain, wall in cases:
+        s = PipelineStats(fe_seconds=fe, train_seconds=train,
+                          drain_seconds=drain, wall_seconds=wall)
+        assert s.busy_seconds == fe + train + drain
+        assert s.overhead_seconds >= 0.0
+        assert s.overlap_seconds >= 0.0
+        assert s.overhead_seconds * s.overlap_seconds == 0.0
+        assert abs(s.wall_seconds
+                   - (s.busy_seconds + s.overhead_seconds
+                      - s.overlap_seconds)) < 1e-12
+        # the ISSUE invariant: wall <= fe + train_net + adapt + drain + overhead
+        assert s.wall_seconds <= (s.fe_seconds + s.train_net_seconds
+                                  + s.adapt_seconds + s.drain_seconds
+                                  + s.overhead_seconds + 1e-12)
+        assert 0.0 <= s.overlap_fraction <= 1.0
+
+
+def test_overlap_fraction_bounds_and_degenerate_cases():
+    from repro.core.pipeline import PipelineStats
+
+    # full overlap: the shorter stage entirely hidden
+    s = PipelineStats(fe_seconds=1.0, train_seconds=3.0, wall_seconds=3.0)
+    assert s.overlap_fraction == 1.0
+    # no train stage at all: fraction defined as 0, not a ZeroDivision
+    s = PipelineStats(fe_seconds=1.0, train_seconds=0.0, wall_seconds=1.0)
+    assert s.overlap_fraction == 0.0
+    # overlap can exceed min(fe, train) only through float noise: clamped
+    s = PipelineStats(fe_seconds=0.5, train_seconds=10.0, wall_seconds=9.0)
+    assert s.overlap_fraction == 1.0
+
+
+def test_accounting_invariant_real_pipelined_run():
+    """A real pipelined run: overhead never negative, identity closes, and
+    the overlap the run was built to produce is visible."""
+    import time
+
+    layers = compile_layers(build_schedule(build_fe_graph()))
+
+    def slow_train(state, env):
+        time.sleep(0.03)
+        return {"sum": state["sum"], "batches": state["batches"] + 1}
+
+    pipe = PipelinedRunner(layers, slow_train, prefetch=2)
+    pipe.run({"sum": 0.0, "batches": 0}, [dict(b) for b in _batches(4)])
+    s = pipe.stats
+    assert s.overhead_seconds >= 0.0
+    assert s.wall_seconds <= (s.fe_seconds + s.train_net_seconds
+                              + s.adapt_seconds + s.drain_seconds
+                              + s.overhead_seconds + 1e-9)
+    assert s.overlap_fraction > 0.0
+
+
+def test_accounting_invariant_serial_staged_run():
+    """StagedRunner is serial: busy time can never exceed wall, so the
+    identity holds with equality (overlap exactly 0)."""
+    layers = compile_layers(build_schedule(build_fe_graph()))
+    staged = StagedRunner(layers, _train_step_factory(),
+                          workdir=tempfile.mkdtemp())
+    staged.run({"sum": 0.0, "batches": 0}, [dict(b) for b in _batches(3)])
+    s = staged.stats
+    assert s.overlap_seconds == 0.0
+    assert s.overlap_fraction == 0.0
+    assert abs(s.wall_seconds - (s.fe_seconds + s.train_net_seconds
+                                 + s.adapt_seconds + s.drain_seconds
+                                 + s.overhead_seconds)) < 1e-9

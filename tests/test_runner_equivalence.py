@@ -218,3 +218,27 @@ def test_trainfeed_runners_equivalent_on_random_specs(spec, cfg, rows, seed,
     run_trainfeed_equivalence(
         spec, cfg, rows, n_batches=2, seed=seed,
         workdir=str(tmp_path_factory.mktemp("staged_tf")))
+
+def test_trainfeed_equivalence_holds_with_tracing_enabled(tmp_path):
+    """Tracing is bit-effect-free: the full runner-equivalence property
+    (Pipelined x {feed off/stage/arena} x {dedup on/off} == Staged) holds
+    unchanged with an enabled tracer installed (deterministic instance)."""
+    from repro.configs import get_arch
+    from repro.obs import Tracer, set_tracer
+
+    fields = ("h_user", "h_ad", "x_user_ad")
+    spec = FeatureSpec(
+        name="traced", base="impressions",
+        sources=(Source("impressions", IMPRESSIONS),),
+        transforms=tuple(_HASHES[f] for f in fields) + (_DENSES["d_dwell"],),
+        outputs=(SparseOutput(fields), DenseOutput(("d_dwell",))))
+    cfg = dataclasses.replace(get_arch("dlrm-mlperf").smoke(),
+                              dedup_capacity=0)
+    tracer = Tracer(enabled=True)
+    prev = set_tracer(tracer)
+    try:
+        run_trainfeed_equivalence(spec, cfg, rows=16, n_batches=2, seed=11,
+                                  workdir=str(tmp_path))
+    finally:
+        set_tracer(prev)
+    assert tracer.n_events > 0  # the runs really were traced
