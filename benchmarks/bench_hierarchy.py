@@ -40,7 +40,7 @@ def run() -> List[Dict]:
                             total_rows=ROWS, dim=DIM,
                             host_cache_rows=cache_rows)
         t0 = time.perf_counter()
-        for step in range(STEPS):
+        for _step in range(STEPS):
             ids = rng.zipf(1.05, size=BATCH) % ROWS
             w, uniq, inv = ps.pull(ids)
             ps.push(uniq, w)  # write-through (worst case)

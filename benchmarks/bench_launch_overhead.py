@@ -16,7 +16,6 @@ from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import ExecutionStats, run_layers, run_unfused
 from repro.fe import featureplan, get_spec

@@ -1,0 +1,61 @@
+"""CLI for the static pipeline checks: ``python -m repro.check``.
+
+Runs all four analyzers (plan verifier, arena/donation aliasing,
+jaxpr effects, lockset audit) against one FE preset x model arch pair,
+without executing a batch.  Exit contract matches
+``benchmarks/run.py --compare``: 0 clean, 1 an analyzer crashed, 2 error
+findings.  ``--json`` emits the machine-readable report (the same shape
+``MetricsRegistry`` records under the ``check`` namespace).
+
+Examples::
+
+    python -m repro.check --preset ads_ctr --arch dlrm-mlperf
+    python -m repro.check --preset bst --arch bst --json
+    python -m repro.check --preset dlrm --arch dlrm-mlperf \
+        --analyzers plan,aliasing
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+from repro.check import run_check
+
+_ANALYZERS = ("plan", "aliasing", "effects", "lockset")
+
+
+def main(argv: Sequence[str] = None) -> int:
+    import argparse
+
+    from repro.configs import list_archs
+    from repro.fe import list_specs
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.check",
+        description="static plan/arena/effects/lockset checks (no execution)")
+    ap.add_argument("--preset", required=True, choices=list_specs(),
+                    help="FE preset spec to compile and verify")
+    ap.add_argument("--arch", required=True, choices=list_archs(),
+                    help="model arch whose smoke config consumes the feed")
+    ap.add_argument("--rows", type=int, default=8, metavar="N",
+                    help="abstract batch rows for shape flow (default 8)")
+    ap.add_argument("--analyzers", default=",".join(_ANALYZERS),
+                    metavar="A,B", help="comma-separated subset of "
+                    f"{'/'.join(_ANALYZERS)} (default: all)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the machine-readable report")
+    args = ap.parse_args(argv)
+
+    analyzers = tuple(a for a in args.analyzers.split(",") if a)
+    unknown = sorted(set(analyzers) - set(_ANALYZERS))
+    if unknown:
+        ap.error(f"unknown analyzers: {unknown} (choose from {_ANALYZERS})")
+
+    report = run_check(args.preset, args.arch, rows=args.rows,
+                       analyzers=analyzers)
+    print(report.to_json() if args.json else report.render())
+    return report.exit_code
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

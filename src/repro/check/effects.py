@@ -1,0 +1,195 @@
+"""Jaxpr effects scan (EF3xx): prove the compiled hot path is effect-free
+and actually donates.
+
+Lowers every fused super-layer dispatch and the fused train step on
+:class:`jax.ShapeDtypeStruct` arguments only — ``jax.make_jaxpr`` /
+``AOT lower`` trace without executing, so this is a static proof, not a
+smoke run. Two properties of the paper's pipeline depend on it:
+
+* **No host effects inside coalesced layers.** A ``jax.debug.print``,
+  ``io_callback``, or ``host_callback`` smuggled into a device op forces
+  XLA to break the fused dispatch with a host sync — exactly the barrier
+  super-layer coalescing (PR 4) exists to remove. The jaxpr's ``effects``
+  set exposes these statically.
+* **Donation really happened.** ``donate_argnums`` is a *request*: jit
+  silently keeps non-donatable or unused arguments. The lowered StableHLO
+  text carries a ``tf.aliasing_output`` attribute (older emitters:
+  ``jax.buffer_donor``) per donated invar; its absence means the arena's
+  staged buffers are copied, not reused, and the donation-fence handshake
+  guards nothing.
+
+Rules
+-----
+``EF301`` (error)   — a coalesced super-layer's fused dispatch carries jaxpr
+    effects (host callback / debug print / IO) that force a host sync.
+``EF302`` (error)   — the train step was built with ``donate=True`` but its
+    lowering shows no donated invars (no aliasing/buffer-donor markers).
+``EF303`` (error)   — the fused train step itself carries jaxpr effects.
+"""
+
+from __future__ import annotations
+
+import warnings
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.check.findings import Finding
+
+_DONATION_MARKERS = ("tf.aliasing_output", "jax.buffer_donor")
+
+
+def _effects_of(fn, *abstract_args) -> Tuple[Optional[frozenset], Optional[str]]:
+    """(effects, error) of tracing ``fn`` on abstract arguments."""
+    try:
+        jaxpr = jax.make_jaxpr(fn)(*abstract_args)
+    except Exception as e:  # noqa: BLE001 - tracing failure IS the finding
+        return None, f"{type(e).__name__}: {e}"
+    return frozenset(jaxpr.effects), None
+
+
+def scan_executables(layers: Sequence, env: Dict[str, jax.ShapeDtypeStruct],
+                     *, location: str = "plan") -> List[Finding]:
+    """EF301 over every fused super-layer dispatch in ``layers``.
+
+    ``env`` maps slot names to abstract values for every device input slot
+    (:func:`repro.check.planverify.abstract_flow` produces it).
+    """
+    findings: List[Finding] = []
+    for ex in layers:
+        if ex.fused_fn is None:
+            continue
+        where = f"{location}/layer {ex.index}"
+        missing = [s for s in ex.device_input_slots if s not in env]
+        if missing:
+            findings.append(Finding(
+                rule="EF301", severity="error", location=where,
+                message=f"cannot trace fused dispatch: no abstract value "
+                        f"for input slots {missing}",
+                hint="run the plan verifier first; its PV103 finding is the "
+                     "root cause"))
+            continue
+        effects, err = _effects_of(
+            ex.fused_fn, {s: env[s] for s in ex.device_input_slots})
+        if err is not None:
+            findings.append(Finding(
+                rule="EF301", severity="error", location=where,
+                message=f"fused dispatch fails abstract tracing: {err}",
+                hint="see the plan verifier's PV103 output"))
+            continue
+        if effects:
+            names = sorted(str(e) for e in effects)
+            findings.append(Finding(
+                rule="EF301", severity="error", location=where,
+                message=(f"coalesced dispatch over layers "
+                         f"{ex.layer_indices} carries jaxpr effects "
+                         f"{names}: XLA must break the fusion with a host "
+                         f"sync"),
+                hint="remove debug.print/io_callback from device ops, or "
+                     "mark the op host-placed so the scheduler splits the "
+                     "layer"))
+    return findings
+
+
+def check_step(jitted, abstract_args: Tuple, *, expect_donation: bool,
+               location: str = "train-step") -> List[Finding]:
+    """EF302/EF303 on one jitted train step, traced on abstract args."""
+    findings: List[Finding] = []
+    effects, err = _effects_of(jitted, *abstract_args)
+    if err is not None:
+        return [Finding(
+            rule="EF303", severity="error", location=location,
+            message=f"train step fails abstract tracing: {err}",
+            hint="the model feed's slot shapes diverge from the train "
+                 "step's batch contract")]
+    if effects:
+        names = sorted(str(e) for e in effects)
+        findings.append(Finding(
+            rule="EF303", severity="error", location=location,
+            message=f"fused train step carries jaxpr effects {names}",
+            hint="an effectful primitive inside the step forces a host "
+                 "sync every batch; strip debug/callback ops"))
+
+    if expect_donation:
+        with warnings.catch_warnings():
+            # jit's partial-donation advisory; the marker scan below makes
+            # the authoritative call (EF302 only when NOTHING was donated).
+            warnings.filterwarnings(
+                "ignore", message="Some donated buffers were not usable")
+            text = jitted.lower(*abstract_args).as_text()
+        if not any(m in text for m in _DONATION_MARKERS):
+            findings.append(Finding(
+                rule="EF302", severity="error", location=location,
+                message=("step was built with donate=True but its lowering "
+                         "shows no donated invars (no "
+                         f"{'/'.join(_DONATION_MARKERS)} markers): params, "
+                         "opt state, and the staged feed are copied every "
+                         "batch"),
+                hint="donation silently degrades when dtypes/shapes of "
+                     "inputs and outputs stop matching; diff the step's "
+                     "in/out avals"))
+    return findings
+
+
+def abstract_step_args(plan, mf) -> Tuple:
+    """Abstract ``(params, opt_state, feed)`` for ``mf``'s fused step.
+
+    Everything is derived without allocating: params via ``eval_shape``
+    over the initializer, optimizer state via the train-step factory's
+    ``abstract_state``, and the feed from the staging layout's slot specs
+    (what :meth:`DeviceFeeder.claim_views` stages, post H2D).
+    """
+    from repro.models import recsys as R
+    from repro.train.optimizer import adamw
+
+    cfg = mf.config
+    params = jax.eval_shape(lambda k: R.init_params(cfg, k),
+                            jax.random.PRNGKey(0))
+    _, _, abstract_state = R.make_sparse_train_step(cfg, adamw(1e-3))
+    opt_state = abstract_state(params)
+
+    layout = plan.feed_layout(split_sparse_fields=mf.split)
+    rows = 8
+    by_name = {s.name: s for s in layout.slots}
+    feed = {}
+    for slot in mf.slots:
+        s = by_name[slot]
+        shape = (rows,) if s.rank1 else (rows, s.width)
+        feed[slot] = jax.ShapeDtypeStruct(shape, np.dtype(s.dtype))
+    return params, opt_state, feed
+
+
+def scan_preset(plan, mf, *, rows: int = 8) -> List[Finding]:
+    """Full effects scan of one compiled preset: every super-layer jit plus
+    the fused, donated train step."""
+    from repro.check import planverify
+
+    env, flow_findings = planverify.abstract_flow(plan, rows)
+    findings: List[Finding] = []
+    if not flow_findings:  # PV103 already reports broken flow
+        findings += scan_executables(plan.layers, env,
+                                     location=f"plan {plan.name!r}")
+
+    args = abstract_step_args(plan, mf)
+    step = mf.make_step(_null_train_step, fused=True, donate=True)
+    findings += check_step(
+        step.jitted, args, expect_donation=True,
+        location=f"train-step {mf.config.name!r}[null]")
+
+    from repro.models import recsys as R
+    from repro.train.optimizer import adamw
+    raw, _, _ = R.make_sparse_train_step(mf.config, adamw(1e-3))
+    real = mf.make_step(raw, fused=True, donate=True)
+    findings += check_step(
+        real.jitted, args, expect_donation=True,
+        location=f"train-step {mf.config.name!r}")
+    return findings
+
+
+def _null_train_step(params, opt_state, batch):
+    """Donation-shaped identity step: same (params, opt, metrics) contract
+    as the real step, zero model math — isolates the model feed's own
+    adaptation in the effects/donation scan."""
+    metrics = {"loss": jax.numpy.zeros((), np.float32)}
+    return params, opt_state, metrics

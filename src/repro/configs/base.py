@@ -12,8 +12,7 @@ for §Perf (e.g. recsys embedding lookup with/without the FeatureBox dedup).
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -23,7 +22,6 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.models import gnn as G
 from repro.models import recsys as R
 from repro.models import transformer as T
-from repro.models.moe import MoEConfig
 from repro.train import optimizer as opt_lib
 
 
@@ -87,10 +85,10 @@ def lm_active_params(cfg: T.LMConfig) -> float:
 
 
 LM_SHAPES = {
-    "train_4k": dict(kind="train", seq=4096, batch=256),
-    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
-    "decode_32k": dict(kind="decode", seq=32768, batch=128),
-    "long_500k": dict(kind="long_decode", seq=524288, batch=1),
+    "train_4k": {"kind": "train", "seq": 4096, "batch": 256},
+    "prefill_32k": {"kind": "prefill", "seq": 32768, "batch": 32},
+    "decode_32k": {"kind": "decode", "seq": 32768, "batch": 128},
+    "long_500k": {"kind": "long_decode", "seq": 524288, "batch": 1},
 }
 
 
@@ -203,10 +201,11 @@ def lm_cell(cfg: T.LMConfig, shape: str, mesh: Mesh, *, variant: str = "base") -
 
 # ============================================================ RecSys family
 RECSYS_SHAPES = {
-    "train_batch": dict(kind="train", batch=65536),
-    "serve_p99": dict(kind="serve", batch=512),
-    "serve_bulk": dict(kind="serve", batch=262144),
-    "retrieval_cand": dict(kind="retrieval", batch=1, candidates=1_000_000),
+    "train_batch": {"kind": "train", "batch": 65536},
+    "serve_p99": {"kind": "serve", "batch": 512},
+    "serve_bulk": {"kind": "serve", "batch": 262144},
+    "retrieval_cand": {"kind": "retrieval", "batch": 1,
+                       "candidates": 1_000_000},
 }
 
 
@@ -295,8 +294,8 @@ def recsys_cell(cfg: R.RecsysConfig, shape: str, mesh: Mesh, *,
                 b_loc = batch // n_shards
                 seq_loc = b_loc * (cfg.seq_len + 1) if cfg.kind == "bst" else 0
                 local_cap = recsys_dedup_cap(cfg, b_loc, seq_loc)
-                hier_kw = dict(mesh=mesh, batch_axes=batch_axes,
-                               local_dedup_capacity=local_cap)
+                hier_kw = {"mesh": mesh, "batch_axes": batch_axes,
+                           "local_dedup_capacity": local_cap}
             step, init_st, abstract_st = R.make_sparse_train_step(
                 cfg, dense_opt, **hier_kw)
             opt_state = abstract_st(params)
@@ -352,14 +351,14 @@ def recsys_cell(cfg: R.RecsysConfig, shape: str, mesh: Mesh, *,
 
 # =============================================================== GNN family
 GNN_SHAPES = {
-    "full_graph_sm": dict(kind="full", n_nodes=2708, n_edges=10556,
-                          d_feat=1433, n_classes=7),
-    "minibatch_lg": dict(kind="sampled", seeds=1024, fanout=(15, 10),
-                         d_feat=602, n_classes=41),
-    "ogb_products": dict(kind="full", n_nodes=2449029, n_edges=61859140,
-                         d_feat=100, n_classes=47),
-    "molecule": dict(kind="graphs", n_graphs=128, nodes_per=30, edges_per=64,
-                     d_feat=28, n_classes=2),
+    "full_graph_sm": {"kind": "full", "n_nodes": 2708, "n_edges": 10556,
+                      "d_feat": 1433, "n_classes": 7},
+    "minibatch_lg": {"kind": "sampled", "seeds": 1024, "fanout": (15, 10),
+                     "d_feat": 602, "n_classes": 41},
+    "ogb_products": {"kind": "full", "n_nodes": 2449029, "n_edges": 61859140,
+                     "d_feat": 100, "n_classes": 47},
+    "molecule": {"kind": "graphs", "n_graphs": 128, "nodes_per": 30,
+                 "edges_per": 64, "d_feat": 28, "n_classes": 2},
 }
 
 

@@ -6,7 +6,7 @@ d_in / n_classes are per-dataset (per shape); see configs.base.GNN_SHAPES.
 
 import functools
 
-from repro.configs.base import ArchSpec, gnn_cell, gnn_config_for
+from repro.configs.base import ArchSpec, gnn_cell
 from repro.models.gnn import PNAConfig
 
 

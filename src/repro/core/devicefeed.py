@@ -53,6 +53,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.check.annotations import guarded_by, shared_entry, single_writer
 from repro.core.mempool import ALIGN, Allocation, ArenaPool, align_up, plan_offsets
 from repro.obs.metrics import harvest
 from repro.obs.trace import get_tracer
@@ -194,6 +195,20 @@ class ArenaClaim:
     epoch: int  # arena generation; a regrow orphans older claims' transfers
 
 
+# Thread contract (verified by `python -m repro.check` / repro.check.lockset):
+# the h2d-feeder thread drives stage()/claim_views(); the main train loop
+# calls flush() and donation_fence(). Ring state is guarded by _lock, the
+# donation handshake by _fence_cond; the remaining stats fields and arena
+# plumbing are written only from the feeder thread.
+@guarded_by("_lock", "_inflight", "_orphans", "_host", "_next", "_seq",
+            "_inflight_seq", "_epoch", "stats.donated", "stats.stall_seconds")
+@guarded_by("_fence_cond", "_fence", "_consumed_seq")
+@shared_entry("feeder:stage", "feeder:claim_views",
+              "main:flush", "main:donation_fence")
+@single_writer("pool", "last_allocs", "_zero_copy_put", "_rewinds_prior",
+               "stats.batches", "stats.bytes_staged", "stats.h2d_seconds",
+               "stats.copies_elided", "stats.rewinds", "stats.reallocs",
+               "stats.arena_capacity")
 class DeviceFeeder:
     """Stage feature batches into device memory through a double-buffered arena.
 
@@ -352,12 +367,19 @@ class DeviceFeeder:
                 if not _deleted(dev):
                     raise
                 donated += 1
+        # Stats updates take _lock: this method runs on BOTH the feeder
+        # thread (ring reclaim via _claim_buffer, which released the lock
+        # before calling here) and the main thread (flush) — unsynchronized
+        # `+=` on the shared FeedStats would lose increments (repro.check
+        # rule LK402 regression).
         if donated:
-            self.stats.donated += donated
+            with self._lock:
+                self.stats.donated += donated
             fence = self._await_donation_fence(seq)
             if fence is not None and not _deleted(fence):
                 fence.block_until_ready()
-        self.stats.stall_seconds += time.perf_counter() - t0
+        with self._lock:
+            self.stats.stall_seconds += time.perf_counter() - t0
         if tracer.enabled:
             w1 = tracer.now_ns()
             if w1 - w0 > 100_000:  # record real waits only (>0.1 ms):

@@ -25,7 +25,7 @@ Both paths are oracle-checked against each other in the tests.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -34,12 +34,11 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Mapping, MutableMapping, Optional, Tuple
+from typing import Any, Callable, Dict, List, MutableMapping, Optional, Tuple
 
 import jax
 
-from repro.core.opgraph import Device
-from repro.core.scheduler import Layer, PlacedOp, Schedule
+from repro.core.scheduler import PlacedOp, Schedule
 from repro.obs.metrics import harvest
 from repro.obs.trace import NULL_SPAN, get_tracer
 

@@ -37,6 +37,7 @@ from typing import Any, Callable, Dict, Iterable, Iterator, List, Mapping, Optio
 
 import numpy as np
 
+from repro.check.annotations import single_writer
 from repro.core.devicefeed import DeviceFeeder
 from repro.core.metakernel import ExecutionStats, LayerExecutable, run_layers
 from repro.obs.metrics import harvest
@@ -146,6 +147,14 @@ def _capture_train_feed(stats: PipelineStats, train_step: Any) -> None:
         stats.train_feed = fs
 
 
+# Thread contract (verified by `python -m repro.check` / repro.check.lockset):
+# PipelineStats is shared without a lock because every field has exactly one
+# writing thread — the fe-worker owns fe_seconds, the main train loop owns
+# the rest (it only reads them after joining the workers). Any new field
+# written from more than one thread must move to a @guarded_by lock.
+@single_writer("stats.fe_seconds",                       # fe-worker thread
+               "stats.train_seconds", "stats.batches",   # main train loop
+               "stats.wall_seconds", "stats.feed")
 class PipelinedRunner:
     """FeatureBox: FE for batch i+1 overlaps training on batch i.
 

@@ -22,7 +22,7 @@ from ``jnp.take`` + ``jax.ops.segment_sum`` as first-class system code:
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -15,11 +15,10 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
-from typing import Dict, Iterator, List, Mapping, Optional, Sequence, Tuple
+from typing import Dict, List, Mapping, Sequence
 
 import numpy as np
 
-from repro.fe.schema import ColType, ViewSchema
 
 MANIFEST = "manifest.json"
 

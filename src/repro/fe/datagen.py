@@ -10,7 +10,7 @@ pipeline stage (read -> clean -> join -> extract -> merge) is exercised.
 from __future__ import annotations
 
 import json
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 import numpy as np
 

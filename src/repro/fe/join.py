@@ -11,12 +11,11 @@ extracted features with basic features on ``instance_id``.
 
 from __future__ import annotations
 
-from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+from typing import Dict, Sequence, Tuple
 
 import numpy as np
 
 from repro.fe.colstore import Columns, RaggedColumn
-from repro.fe.schema import ColType, Column, ViewSchema
 
 
 def _build_index(keys: np.ndarray) -> Dict[int, int]:

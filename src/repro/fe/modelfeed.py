@@ -358,7 +358,8 @@ class ModelFeed:
                     f"dedup working set saturated (unique={u} >= capacity="
                     f"{self.dedup_capacity}): ids beyond the capacity are "
                     f"silently dropped from the working set — raise the "
-                    f"rows hint / dedup_capacity", RuntimeWarning)
+                    f"rows hint / dedup_capacity", RuntimeWarning,
+                    stacklevel=2)
             self.stats.overflows += 1
 
 

@@ -12,13 +12,13 @@ sparse id convention is ``field_offset + (hash % field_size)`` — the classic
 
 from __future__ import annotations
 
-from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+from typing import List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.fe.colstore import Columns, RaggedColumn
+from repro.fe.colstore import RaggedColumn
 
 # ----------------------------------------------------------------- hashing
 # Finalizer of MurmurHash3 (fmix32) — good avalanche, cheap on the VPU

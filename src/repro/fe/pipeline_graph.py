@@ -25,14 +25,14 @@ graph runs under both the pipelined and the staged executor.
 
 from __future__ import annotations
 
-from typing import Dict, List, Tuple
+from typing import Dict
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.opgraph import Device, OpCost, Operator, OpGraph
 from repro.fe import ops as F
-from repro.fe.colstore import Columns, RaggedColumn
+from repro.fe.colstore import Columns
 from repro.fe.datagen import AD_INVENTORY, IMPRESSIONS, USER_PROFILE
 from repro.fe.join import hash_join, merge_on_instance
 from repro.fe.schema import ColType

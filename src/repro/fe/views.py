@@ -12,7 +12,7 @@ paper assigns them; their numeric outputs flow to the device.
 from __future__ import annotations
 
 import json
-from typing import Callable, Dict, List, Mapping, Optional, Sequence
+from typing import Dict, List, Mapping, Optional
 
 import numpy as np
 

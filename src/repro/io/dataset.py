@@ -15,7 +15,7 @@ import dataclasses
 import glob
 import json
 import os
-from typing import Any, Dict, Iterator, List, Mapping, Optional, Sequence, Union
+from typing import Any, Dict, Iterator, List, Mapping, Optional, Sequence
 
 import numpy as np
 

@@ -28,6 +28,7 @@ import threading
 import time
 from typing import Any, Callable, Dict, Iterator, List, Mapping, Optional, Sequence, Union
 
+from repro.check.annotations import guarded_by, single_writer
 from repro.io.dataset import ShardDataset, ShardInfo
 from repro.io.shardfmt import ShardReader
 from repro.obs.metrics import harvest
@@ -82,6 +83,12 @@ class IngestStats:
                 f"consumer_stall={self.consumer_stall_seconds:.2f}s")
 
 
+# Thread contract (verified by `python -m repro.check` / repro.check.lockset):
+# N reader threads and the consuming thread both update IngestStats, so
+# every write to `stats` (including the per-pass rebind in __iter__) holds
+# _lock; the thread-pool plumbing is only ever touched by the consumer.
+@guarded_by("_lock", "stats")
+@single_writer("_threads", "_out", "_running")
 class StreamingLoader:
     """Iterate shard environments with a prefetching reader pool.
 
@@ -236,7 +243,9 @@ class StreamingLoader:
             raise RuntimeError("StreamingLoader is already being iterated")
         # Fresh stats per pass: a reused loader must not blend a prior
         # (possibly abandoned) pass into this run's throughput numbers.
-        self.stats = IngestStats()
+        # Under _lock: a prior pass's readers may still be draining.
+        with self._lock:
+            self.stats = IngestStats()
         plan = self._shard_plan()
         work: "queue.Queue" = queue.Queue()
         for info in plan:
@@ -266,13 +275,17 @@ class StreamingLoader:
                 item = out.get()
                 stall = time.perf_counter() - t0
                 if stall > 1e-4:
-                    self.stats.consumer_stall_seconds += stall
+                    # Under _lock: readers concurrently update sibling
+                    # IngestStats fields (repro.check rule LK402).
+                    with self._lock:
+                        self.stats.consumer_stall_seconds += stall
                     if tracer.enabled:
                         # Consumer blocked on an empty queue: the disk /
                         # decode side is the bottleneck over this window.
                         tracer.complete("io.wait_shard", w0, tracer.now_ns())
-                self.stats.max_queue_depth = max(self.stats.max_queue_depth,
-                                                 out.qsize() + 1)
+                with self._lock:
+                    self.stats.max_queue_depth = max(
+                        self.stats.max_queue_depth, out.qsize() + 1)
                 tracer.counter("io.queue_depth", out.qsize() + 1)
                 if item is _WORKER_DONE:
                     done += 1
@@ -282,7 +295,8 @@ class StreamingLoader:
                         f"shard reader failed on {item.shard}") from item.exc
                 yield item
         finally:
-            self.stats.wall_seconds += time.perf_counter() - t_start
+            with self._lock:
+                self.stats.wall_seconds += time.perf_counter() - t_start
             self.close()
 
     def close(self) -> None:

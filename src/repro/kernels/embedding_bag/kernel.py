@@ -27,7 +27,6 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 BATCH_TILE = 256   # bags per grid step
 VOCAB_BLOCK = 512  # table rows per grid step (MXU-aligned multiple of 128)

@@ -8,7 +8,6 @@ full sharded table go through ``repro.embedding.table`` which performs dedup
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels.embedding_bag.kernel import embedding_bag
 from repro.kernels.embedding_bag.ref import embedding_bag_ref

@@ -18,7 +18,7 @@ All arithmetic is uint32 (TPU-native), matching ``repro.fe.ops`` bit-for-bit.
 from __future__ import annotations
 
 import functools
-from typing import Sequence, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

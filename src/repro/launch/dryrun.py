@@ -22,7 +22,7 @@ import json
 import re
 import time
 import traceback
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 import numpy as np

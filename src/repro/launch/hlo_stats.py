@@ -20,9 +20,8 @@ Validated against cost_analysis on unrolled graphs in tests/test_hlo_stats.py.
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 from repro.obs.metrics import harvest
 

@@ -11,14 +11,12 @@ from __future__ import annotations
 
 import argparse
 import time
-from typing import Any, Dict
 
 import jax
 import numpy as np
 
 from repro.configs import get_arch
 from repro.launch.train import synthetic_batch
-from repro.train.optimizer import adamw
 
 
 def main() -> None:

@@ -71,7 +71,7 @@ def synthetic_batch(family: str, cfg, batch: int, step: int) -> Dict[str, Any]:
 from repro.fe.modelfeed import fe_env_to_model_batch_ref as fe_env_to_model_batch  # noqa: E402,E501
 
 
-def run_streaming(args, spec, cfg, state, opt) -> None:
+def run_streaming(args, spec, cfg, state, opt, check_report=None) -> None:
     """Stream raw-log shards from disk through FE into the train step.
 
     The stage->train boundary is compiled: ``repro.fe.modelfeed`` derives
@@ -217,6 +217,8 @@ def run_streaming(args, spec, cfg, state, opt) -> None:
         from repro.launch.hlo_stats import step_cost
         from repro.obs import MetricsRegistry
         reg = MetricsRegistry.from_pipeline(s)
+        if check_report is not None:
+            reg.register("check", check_report)
         if cost_args:
             tot = step_cost(fused.jitted, *cost_args[0])
             reg.register("hlo", tot)
@@ -278,6 +280,12 @@ def main() -> None:
                          "of the run to PATH: loader readers, FE worker, "
                          "H2D feeder, and train loop as separate tracks "
                          "(open in ui.perfetto.dev or chrome://tracing)")
+    ap.add_argument("--check", action="store_true",
+                    help="preflight the run with repro.check (static plan "
+                         "verifier, arena aliasing, jaxpr effects, lockset "
+                         "audit) and refuse to train on error findings; "
+                         "the report lands in the --metrics snapshot under "
+                         "'check.*'")
     ap.add_argument("--metrics", action="store_true",
                     help="print the consolidated repro.obs.MetricsRegistry "
                          "snapshot (JSON) plus per-step HLO FLOPs / "
@@ -299,11 +307,32 @@ def main() -> None:
                   f"{len(tracer.track_names())} tracks -> {args.trace}")
 
 
+def _preflight(args, spec):
+    """``--check``: run the static analyzers before touching any data.
+
+    Returns the :class:`repro.check.Report` (registered under the
+    ``check`` metrics tier) or raises ``SystemExit`` with the report's
+    exit code on error findings / analyzer crashes — the 0/1/2 contract
+    of ``python -m repro.check``.
+    """
+    from repro.check import run_check
+    if spec.family != "recsys":
+        raise SystemExit(
+            f"--check verifies the FE feed pipeline, which only recsys "
+            f"archs consume (got family={spec.family!r})")
+    report = run_check(args.spec, args.arch)
+    print(report.render())
+    if report.exit_code:
+        raise SystemExit(report.exit_code)
+    return report
+
+
 def _run(args) -> None:
     spec = get_arch(args.arch)
     cfg = spec.smoke()
     key = jax.random.PRNGKey(0)
     opt = adamw(args.lr)
+    check_report = _preflight(args, spec) if args.check else None
 
     if spec.family == "lm":
         from repro.models import transformer as T
@@ -328,7 +357,8 @@ def _run(args) -> None:
         # The streaming path builds its own boundary step: the working-set
         # capacity is tuned from the dataset manifest, so the train step
         # is compiled there (same state/optimizer structure).
-        run_streaming(args, spec, cfg, state, opt)
+        run_streaming(args, spec, cfg, state, opt,
+                      check_report=check_report)
         return
 
     def step_wrapper(state, batch):
@@ -356,6 +386,8 @@ def _run(args) -> None:
         from repro.obs import MetricsRegistry
         reg = MetricsRegistry()
         reg.register("loop", stats)
+        if check_report is not None:
+            reg.register("check", check_report)
         tot = step_cost(train_step, state["params"], state["opt"],
                         synthetic_batch(spec.family, cfg, args.batch, 0))
         reg.register("hlo", tot)

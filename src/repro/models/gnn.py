@@ -22,7 +22,7 @@ partials (DESIGN.md §5).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -32,7 +32,7 @@ from repro import compat
 
 compat.install()  # jax.shard_map on older jax
 
-from repro.models.common import he_init, mlp, sigmoid_bce, softmax_xent
+from repro.models.common import he_init, softmax_xent
 
 Params = Dict[str, Any]
 
@@ -239,7 +239,6 @@ def forward_sharded(params: Params, c: PNAConfig, batch: Dict[str, jax.Array],
     range only. Node-sharded aggregates never replicate — the structure that
     makes 2.4M-node full-batch training fit (see dry-run ogb_products).
     """
-    import functools as ft
     from jax.sharding import PartitionSpec as P
 
     feats, src, dst = batch["features"], batch["src"], batch["dst"]

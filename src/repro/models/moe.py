@@ -19,8 +19,7 @@ The same math runs without a mesh (``mesh=None``) for CPU smoke tests.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -19,7 +19,7 @@ form (same math) lowers through XLA.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -29,8 +29,6 @@ from jax.sharding import PartitionSpec as P
 from repro.embedding.table import MultiTable, TableSpec, lookup, lookup_dedup
 from repro.models.common import (
     dense as dense_layer,
-    embed_init,
-    glorot_init,
     he_init,
     layer_norm,
     mlp,

@@ -17,8 +17,7 @@ Params are plain pytrees; ``abstract_params`` builds ShapeDtypeStructs so the
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

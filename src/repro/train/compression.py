@@ -14,8 +14,7 @@ vs in-pod ICI), so cross-pod gradient all-reduce benefits from compression:
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Optional, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

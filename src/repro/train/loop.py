@@ -13,17 +13,13 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, Iterable, Iterator, List, Mapping, Optional
+from typing import Any, Callable, Dict, List, Mapping, Optional
 
-import jax
-import numpy as np
 
 from repro.core.metakernel import LayerExecutable, run_layers
-from repro.core.pipeline import PipelinedRunner
 from repro.obs.metrics import harvest
 from repro.obs.trace import NULL_SPAN, get_tracer
 from repro.train.checkpoint import CheckpointManager
-from repro.train.fault import ShardServer, StragglerPolicy
 
 
 @dataclasses.dataclass

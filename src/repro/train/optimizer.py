@@ -8,8 +8,6 @@ in bf16 to fit HBM — see DESIGN.md §5 and EXPERIMENTS.md §Perf).
 
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax

@@ -1,0 +1,84 @@
+"""Hypothesis property: the static aliasing analyzer and the runtime
+planners (prefix-sum plan, Pallas kernel, ArenaPool) agree on EVERY random
+layout — the analyzer's shadow plan is a faithful model, not a lookalike."""
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
+
+from repro.check.aliasing import (  # noqa: E402
+    _shadow_plan,
+    check_feed_layout,
+    check_plan,
+)
+from repro.core.devicefeed import FeedLayout, SlotSpec  # noqa: E402
+from repro.core.mempool import ALIGN, ArenaPool, align_up  # noqa: E402
+
+_DTYPES = ("float32", "int32", "int64", "float64", "uint8")
+
+
+@st.composite
+def layouts(draw):
+    n = draw(st.integers(min_value=1, max_value=8))
+    slots = []
+    for i in range(n):
+        width = draw(st.integers(min_value=1, max_value=64))
+        rank1 = draw(st.booleans())
+        slots.append(SlotSpec(f"slot{i:02d}", 1 if rank1 else width,
+                              draw(st.sampled_from(_DTYPES)), rank1=rank1))
+    return FeedLayout(slots=tuple(slots))
+
+
+@hypothesis.settings(max_examples=60, deadline=None)
+@hypothesis.given(layout=layouts(),
+                  rows=st.integers(min_value=0, max_value=4096))
+def test_analyzer_passes_every_valid_layout(layout, rows):
+    findings = check_feed_layout(layout, rows)
+    assert findings == [], "\n".join(f.render() for f in findings)
+
+
+@hypothesis.settings(max_examples=60, deadline=None)
+@hypothesis.given(layout=layouts(),
+                  rows=st.integers(min_value=0, max_value=4096))
+def test_shadow_plan_matches_arena_pool_exactly(layout, rows):
+    sizes = layout.sizes(rows)
+    offsets, end = _shadow_plan(sizes, layout.align)
+    total = align_up(end, layout.align)
+    pool = ArenaPool(total, align=layout.align)
+    allocs = pool.alloc_block(sizes)
+    assert [a.offset for a in allocs] == offsets
+    # The runtime planner agrees too (the tri-oracle's second leg).
+    plan_offsets, plan_total = layout.plan(rows)
+    assert list(np.asarray(plan_offsets)) == offsets
+    assert int(plan_total) == total == layout.arena_bytes(rows)
+
+
+@hypothesis.settings(max_examples=60, deadline=None)
+@hypothesis.given(
+    sizes=st.lists(st.integers(min_value=0, max_value=1 << 20),
+                   min_size=1, max_size=10))
+def test_shadow_plan_invariants_hold_for_raw_sizes(sizes):
+    offsets, end = _shadow_plan(sizes, ALIGN)
+    total = align_up(end, ALIGN)
+    assert check_plan(sizes, offsets, total) == []
+
+
+@hypothesis.settings(max_examples=40, deadline=None)
+@hypothesis.given(
+    sizes=st.lists(st.integers(min_value=1, max_value=1 << 16),
+                   min_size=2, max_size=8),
+    victim=st.integers(min_value=1, max_value=7),
+    shift=st.integers(min_value=1, max_value=ALIGN - 1))
+def test_any_offset_perturbation_is_caught(sizes, victim, shift):
+    """Completeness: shifting any planned offset off its slot either
+    collides (AL201), misaligns (AL202), or overruns (AL201)."""
+    offsets, end = _shadow_plan(sizes, ALIGN)
+    total = align_up(end, ALIGN)
+    victim %= len(sizes)
+    bad = list(offsets)
+    bad[victim] -= shift  # lands inside the previous slot or misaligns
+    findings = check_plan(sizes, bad, total)
+    assert findings, "perturbed plan must not verify clean"
+    assert {f.rule for f in findings} <= {"AL201", "AL202"}

@@ -1,0 +1,148 @@
+"""Effects scan (EF3xx): effectful/non-donating steps each hit their rule."""
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.check import effects, planverify
+from repro.configs import get_arch
+from repro.fe import featureplan, get_spec
+
+
+def _rules(findings):
+    return sorted({f.rule for f in findings})
+
+
+@dataclasses.dataclass
+class _FakeEx:
+    index: int
+    layer_indices: tuple
+    fused_fn: object
+    device_input_slots: tuple
+    host_ops: tuple = ()
+
+
+_ENV = {"a": jax.ShapeDtypeStruct((4,), np.float32)}
+
+_STEP_ARGS = ({"w": jax.ShapeDtypeStruct((2, 2), np.float32)},
+              {"m": jax.ShapeDtypeStruct((2, 2), np.float32)},
+              {"x": jax.ShapeDtypeStruct((4,), np.float32)})
+
+
+# ------------------------------------------------------------------- EF301
+def test_ef301_debug_print_in_fused_dispatch():
+    def noisy(env):
+        jax.debug.print("x={x}", x=env["a"])
+        return {"b": env["a"] + 1}
+
+    layers = [_FakeEx(0, (0, 1), noisy, ("a",))]
+    assert _rules(effects.scan_executables(layers, _ENV)) == ["EF301"]
+
+
+def test_ef301_io_callback_in_fused_dispatch():
+    def leaky(env):
+        jax.experimental.io_callback(lambda v: None, None, env["a"])
+        return {"b": env["a"] * 2}
+
+    import jax.experimental  # noqa: F401 - io_callback lives here
+    layers = [_FakeEx(0, (0, 1, 2), leaky, ("a",))]
+    assert _rules(effects.scan_executables(layers, _ENV)) == ["EF301"]
+
+
+def test_ef301_missing_abstract_input_reported_not_raised():
+    layers = [_FakeEx(0, (0, 1), lambda env: env, ("a", "ghost"))]
+    findings = effects.scan_executables(layers, _ENV)
+    assert _rules(findings) == ["EF301"]
+    assert "ghost" in findings[0].message
+
+
+def test_pure_fused_dispatch_is_clean():
+    layers = [_FakeEx(0, (0, 1), lambda env: {"b": env["a"] + 1}, ("a",)),
+              _FakeEx(1, (2,), None, ())]  # host-only layer: skipped
+    assert effects.scan_executables(layers, _ENV) == []
+
+
+# ------------------------------------------------------------------- EF302
+def test_ef302_donation_requested_but_nothing_donated():
+    def step(params, opt, feed):
+        return params, opt, {}
+
+    jitted = jax.jit(step)  # no donate_argnums: no aliasing markers
+    findings = effects.check_step(jitted, _STEP_ARGS, expect_donation=True)
+    assert _rules(findings) == ["EF302"]
+
+
+def test_ef302_not_raised_when_donation_not_expected():
+    jitted = jax.jit(lambda p, o, f: (p, o, {}))
+    assert effects.check_step(jitted, _STEP_ARGS,
+                              expect_donation=False) == []
+
+
+def test_ef302_clean_when_params_actually_donated():
+    def step(params, opt, feed):
+        new = jax.tree_util.tree_map(lambda a: a + 1.0, params)
+        return new, opt, {}
+
+    jitted = jax.jit(step, donate_argnums=(0,))
+    assert effects.check_step(jitted, _STEP_ARGS,
+                              expect_donation=True) == []
+
+
+# ------------------------------------------------------------------- EF303
+def test_ef303_effectful_train_step():
+    def step(params, opt, feed):
+        jax.debug.print("loss tick")
+        new = jax.tree_util.tree_map(lambda a: a + 1.0, params)
+        return new, opt, {}
+
+    jitted = jax.jit(step, donate_argnums=(0,))
+    findings = effects.check_step(jitted, _STEP_ARGS, expect_donation=True)
+    assert _rules(findings) == ["EF303"]
+
+
+def test_ef303_tracing_failure_reported_not_raised():
+    def step(params, opt, feed):
+        return params["no_such_key"], opt, {}
+
+    jitted = jax.jit(step)
+    findings = effects.check_step(jitted, _STEP_ARGS, expect_donation=True)
+    assert _rules(findings) == ["EF303"]
+
+
+# ----------------------------------------------------------- preset e2e
+def test_ads_ctr_preset_scan_is_clean():
+    plan = featureplan.compile(get_spec("ads_ctr"))
+    cfg = get_arch("dlrm-mlperf").smoke()
+    mf = plan.model_feed(cfg, split_sparse_fields=True)
+    findings = effects.scan_preset(plan, mf, rows=8)
+    assert findings == [], "\n".join(f.render() for f in findings)
+
+
+def test_abstract_step_args_match_real_step_signature():
+    plan = featureplan.compile(get_spec("ads_ctr"))
+    cfg = get_arch("dlrm-mlperf").smoke()
+    mf = plan.model_feed(cfg, split_sparse_fields=True)
+    params, opt, feed = effects.abstract_step_args(plan, mf)
+    # Every feed slot the model consumes is present and batch-shaped.
+    assert set(feed) == set(mf.slots)
+    assert all(isinstance(v, jax.ShapeDtypeStruct) for v in feed.values())
+    # The flow's abstract env agrees with the staged feed's dtypes.
+    env, flow_findings = planverify.abstract_flow(plan, 8)
+    assert flow_findings == []
+
+
+def test_effectful_fused_layer_caught_on_real_plan():
+    plan = featureplan.compile(get_spec("ads_ctr"))
+    target = next(ex for ex in plan.layers if ex.fused_fn is not None)
+    inner = target.fused_fn
+
+    def noisy(env):
+        jax.debug.print("smuggled")
+        return inner(env)
+
+    bad_ex = dataclasses.replace(target, fused_fn=noisy)
+    layers = [bad_ex if e is target else e for e in plan.layers]
+    env, _ = planverify.abstract_flow(plan, 8)
+    findings = effects.scan_executables(layers, env)
+    assert _rules(findings) == ["EF301"]

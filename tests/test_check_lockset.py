@@ -1,0 +1,268 @@
+"""Lockset audit (LK4xx): synthetic racy/clean classes + the real modules."""
+
+import textwrap
+
+from repro.check.lockset import audit_default, check_source
+
+
+def _rules(src):
+    return sorted({f.rule for f in check_source(textwrap.dedent(src))})
+
+
+# ------------------------------------------------------------------- LK401
+def test_lk401_undeclared_write_from_two_threads():
+    src = """
+    import threading
+
+    class Worker:
+        def __init__(self):
+            self.count = 0
+
+        def start(self):
+            threading.Thread(target=self._run).start()
+            self.count += 1          # main
+
+        def _run(self):
+            self.count += 1          # thread:_run
+    """
+    assert _rules(src) == ["LK401"]
+
+
+def test_lk401_parent_rebind_conflicts_with_child_write():
+    src = """
+    import threading
+
+    class Loader:
+        def start(self):
+            threading.Thread(target=self._reader).start()
+            self.stats = object()    # rebind from main
+
+        def _reader(self):
+            self.stats.rows += 1     # child write from reader thread
+    """
+    assert _rules(src) == ["LK401"]
+
+
+def test_lk401_not_raised_for_sibling_fields_each_owned_by_one_thread():
+    src = """
+    import threading
+
+    class Runner:
+        def start(self):
+            threading.Thread(target=self._fe).start()
+            self.stats.train_seconds += 1.0   # main only
+
+        def _fe(self):
+            self.stats.fe_seconds += 1.0      # fe thread only
+    """
+    assert _rules(src) == []
+
+
+def test_lk401_deduped_per_path():
+    src = """
+    import threading
+
+    class W:
+        def start(self):
+            threading.Thread(target=self._run).start()
+            self.n += 1
+            self.n += 2
+
+        def _run(self):
+            self.n += 3
+    """
+    findings = check_source(textwrap.dedent(src))
+    assert [f.rule for f in findings] == ["LK401"]
+
+
+# ------------------------------------------------------------------- LK402
+def test_lk402_guarded_write_without_lock():
+    src = """
+    import threading
+    from repro.check.annotations import guarded_by, shared_entry
+
+    @guarded_by("_lock", "shared")
+    @shared_entry("feeder:stage", "main:flush")
+    class Feeder:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self.shared = 0
+
+        def stage(self):
+            self.shared += 1         # missing `with self._lock:`
+
+        def flush(self):
+            with self._lock:
+                self.shared = 0
+    """
+    assert _rules(src) == ["LK402"]
+
+
+def test_lk402_clean_when_lock_held():
+    src = """
+    import threading
+    from repro.check.annotations import guarded_by, shared_entry
+
+    @guarded_by("_lock", "shared")
+    @shared_entry("feeder:stage", "main:flush")
+    class Feeder:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self.shared = 0
+
+        def stage(self):
+            with self._lock:
+                self.shared += 1
+
+        def flush(self):
+            with self._lock:
+                self.shared = 0
+    """
+    assert _rules(src) == []
+
+
+def test_lk402_nested_def_does_not_inherit_lock():
+    # Code deferred into a nested function runs later, without the lock.
+    src = """
+    import threading
+    from repro.check.annotations import guarded_by, shared_entry
+
+    @guarded_by("_lock", "shared")
+    @shared_entry("a:go", "b:go2")
+    class C:
+        def __init__(self):
+            self._lock = threading.Lock()
+
+        def go(self):
+            with self._lock:
+                def later():
+                    self.shared = 1
+                return later
+
+        def go2(self):
+            with self._lock:
+                self.shared = 2
+    """
+    assert _rules(src) == ["LK402"]
+
+
+def test_lk402_dotted_child_of_guarded_path():
+    src = """
+    import threading
+    from repro.check.annotations import guarded_by, shared_entry
+
+    @guarded_by("_lock", "stats")
+    @shared_entry("a:tick", "b:tock")
+    class C:
+        def __init__(self):
+            self._lock = threading.Lock()
+
+        def tick(self):
+            self.stats.donated += 1   # child path of guarded 'stats'
+
+        def tock(self):
+            with self._lock:
+                self.stats.donated += 1
+    """
+    assert _rules(src) == ["LK402"]
+
+
+# ------------------------------------------------------------------- LK403
+def test_lk403_guarded_by_names_missing_lock():
+    src = """
+    from repro.check.annotations import guarded_by
+
+    @guarded_by("_no_such_lock", "x")
+    class C:
+        def __init__(self):
+            self.x = 0
+    """
+    assert _rules(src) == ["LK403"]
+
+
+def test_lk403_shared_entry_names_missing_method():
+    src = """
+    import threading
+    from repro.check.annotations import shared_entry
+
+    @shared_entry("worker:no_such_method")
+    class C:
+        def __init__(self):
+            self._lock = threading.Lock()
+    """
+    assert _rules(src) == ["LK403"]
+
+
+# ------------------------------------------------------------------- LK404
+def test_lk404_single_writer_contradicted():
+    src = """
+    import threading
+    from repro.check.annotations import single_writer
+
+    @single_writer("owned")
+    class C:
+        def start(self):
+            threading.Thread(target=self._run).start()
+            self.owned += 1
+
+        def _run(self):
+            self.owned += 1
+    """
+    assert _rules(src) == ["LK404"]
+
+
+def test_single_writer_honest_claim_is_clean():
+    src = """
+    import threading
+    from repro.check.annotations import single_writer
+
+    @single_writer("owned")
+    class C:
+        def start(self):
+            threading.Thread(target=self._run).start()
+
+        def _run(self):
+            self.owned += 1          # only the worker thread writes it
+    """
+    assert _rules(src) == []
+
+
+# -------------------------------------------------------------- label model
+def test_shared_entries_on_same_label_do_not_race():
+    # stage and claim_views both run on the feeder thread: same label.
+    src = """
+    from repro.check.annotations import shared_entry
+
+    @shared_entry("feeder:stage", "feeder:claim")
+    class C:
+        def stage(self):
+            self.cursor = 1
+
+        def claim(self):
+            self.cursor = 2
+    """
+    assert _rules(src) == []
+
+
+def test_unreachable_method_writes_are_ignored():
+    src = """
+    import threading
+
+    class C:
+        def start(self):
+            threading.Thread(target=self._run).start()
+
+        def _run(self):
+            pass
+
+        def helper_never_called_from_a_root(self):
+            self.x = 1
+            self.y = 2
+    """
+    assert _rules(src) == []
+
+
+# ------------------------------------------------------------- real modules
+def test_pipeline_modules_pass_the_audit():
+    findings = audit_default()
+    assert findings == [], "\n".join(f.render() for f in findings)

@@ -1,0 +1,212 @@
+"""Plan verifier (PV1xx): hand-broken plans each hit exactly their rule."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.check import planverify
+from repro.configs import get_arch
+from repro.fe import featureplan, get_spec
+
+
+def _rules(findings):
+    return sorted({f.rule for f in findings})
+
+
+@pytest.fixture(scope="module")
+def plan():
+    return featureplan.compile(get_spec("ads_ctr"))
+
+
+@pytest.fixture(scope="module")
+def mf(plan):
+    cfg = get_arch("dlrm-mlperf").smoke()
+    return plan.model_feed(cfg, split_sparse_fields=True)
+
+
+@pytest.fixture(scope="module")
+def feed_layout(plan, mf):
+    return plan.feed_layout(split_sparse_fields=mf.split)
+
+
+# -------------------------------------------------------------------- clean
+@pytest.mark.parametrize("preset,arch", [("ads_ctr", "dlrm-mlperf"),
+                                         ("dlrm", "dlrm-mlperf"),
+                                         ("bst", "bst")])
+def test_compiled_presets_verify_clean(preset, arch):
+    p = featureplan.compile(get_spec(preset))
+    cfg = get_arch(arch).smoke()
+    m = p.model_feed(cfg, split_sparse_fields=True)
+    findings = planverify.verify_plan(p, rows=8)
+    findings += planverify.verify_model_feed(
+        m, p.feed_layout(split_sparse_fields=m.split))
+    assert findings == [], "\n".join(f.render() for f in findings)
+
+
+# ------------------------------------------------------------------- PV101
+def test_pv101_layout_declares_phantom_sequence_block(plan):
+    bad = dataclasses.replace(plan,
+                              layout=dataclasses.replace(plan.layout,
+                                                         seq_len=7))
+    assert _rules(planverify.verify_plan(bad, rows=8)) == ["PV101"]
+
+
+def test_pv101_width_mismatch_is_a_shape_finding(plan):
+    lay = dataclasses.replace(plan.layout,
+                              n_dense_feats=plan.layout.n_dense_feats + 3)
+    bad = dataclasses.replace(plan, layout=lay)
+    findings = planverify.verify_plan(bad, rows=8)
+    assert _rules(findings) == ["PV101"]
+    assert any("batch_dense" in f.message for f in findings)
+
+
+def test_pv101_undeclared_produced_output(plan):
+    # Zero out the declared sparse block: the plan still produces
+    # batch_sparse, which the layout now fails to declare.
+    lay = dataclasses.replace(plan.layout, n_sparse_fields=0)
+    bad = dataclasses.replace(plan, layout=lay)
+    findings = planverify.verify_plan(bad, rows=8)
+    assert "PV101" in _rules(findings)
+    assert any("batch_sparse" in f.message for f in findings)
+
+
+# ------------------------------------------------------------------- PV102
+def test_pv102_host_op_inside_coalesced_superlayer(plan):
+    multi = [ex for ex in plan.layers if len(ex.layer_indices) > 1]
+    host_ops = [p for ex in plan.layers for p in ex.host_ops]
+    assert multi and host_ops, "ads_ctr plan should have both"
+    target = multi[-1]
+    # Graft a real host op whose schedule depth is not the super-layer's
+    # first member layer.
+    alien = [p for p in host_ops
+             if plan.schedule.depth_of[p.op.name] != target.layer_indices[0]]
+    bad_ex = dataclasses.replace(target, host_ops=(alien[0],))
+    bad = dataclasses.replace(
+        plan, layers=[bad_ex if e is target else e for e in plan.layers])
+    findings = planverify.check_placement(bad)
+    assert _rules(findings) == ["PV102"]
+
+
+def test_pv102_host_op_at_barrier_layer_is_legal(plan):
+    # The real ads_ctr plan carries a host op at a super-layer's first
+    # member layer (merge into layers (3, 4, 5)): that placement is the
+    # legal form, and the rule must not flag it.
+    assert planverify.check_placement(plan) == []
+
+
+def test_pv102_single_layer_executables_exempt(plan):
+    singles = [ex for ex in plan.layers if len(ex.layer_indices) == 1]
+    sub = dataclasses.replace(plan, layers=singles)
+    assert planverify.check_placement(sub) == []
+
+
+# ------------------------------------------------------------------- PV103
+def test_pv103_unproducible_input_slot(plan):
+    last = plan.layers[-1]
+    bad_ex = dataclasses.replace(
+        last, device_input_slots=("mystery_slot",) + tuple(
+            last.device_input_slots))
+    bad = dataclasses.replace(
+        plan, layers=[bad_ex if e is last else e for e in plan.layers])
+    _, findings = planverify.abstract_flow(bad, 8)
+    assert _rules(findings) == ["PV103"]
+    assert "mystery_slot" in findings[0].message
+
+
+def test_pv103_tracing_failure_reported_not_raised(plan):
+    def broken_fn(env):
+        raise TypeError("shape contract violated")
+
+    first_fused = next(ex for ex in plan.layers if ex.fused_fn is not None)
+    bad_ex = dataclasses.replace(first_fused, fused_fn=broken_fn)
+    bad = dataclasses.replace(
+        plan,
+        layers=[bad_ex if e is first_fused else e for e in plan.layers])
+    _, findings = planverify.abstract_flow(bad, 8)
+    assert _rules(findings) == ["PV103"]
+
+
+def test_pv103_duplicate_producer(plan):
+    fused = [ex for ex in plan.layers if ex.fused_fn is not None]
+    assert fused, "ads_ctr plan should have fused layers"
+    dup = fused[0]
+    bad = dataclasses.replace(plan, layers=list(plan.layers) + [dup])
+    _, findings = planverify.abstract_flow(bad, 8)
+    assert "PV103" in _rules(findings)
+    assert any("produced twice" in f.message for f in findings)
+
+
+# ------------------------------------------------------------------- PV104
+def test_pv104_projection_missing_a_column(plan):
+    rc = {v: tuple(cols) for v, cols in plan.required_columns.items()}
+    view = sorted(v for v, cols in rc.items() if cols)[0]
+    dropped = rc[view][-1]
+    rc[view] = rc[view][:-1]
+    bad = dataclasses.replace(plan, required_columns=rc)
+    findings = planverify.verify_plan(bad, rows=8)
+    assert _rules(findings) == ["PV104"]
+    assert any(dropped in f.message for f in findings)
+
+
+def test_pv104_missing_view_flags_every_column(plan):
+    rc = {v: tuple(cols) for v, cols in plan.required_columns.items()}
+    view = sorted(v for v, cols in rc.items() if cols)[0]
+    n_cols = len(rc.pop(view))
+    bad = dataclasses.replace(plan, required_columns=rc)
+    findings = [f for f in planverify.verify_plan(bad, rows=8)
+                if f.rule == "PV104"]
+    assert len(findings) == n_cols
+
+
+def test_pv104_superset_projection_is_legal(plan):
+    rc = {v: tuple(cols) + ("extra_unused_col",)
+          for v, cols in plan.required_columns.items()}
+    loose = dataclasses.replace(plan, required_columns=rc)
+    assert planverify.verify_plan(loose, rows=8) == []
+
+
+# ------------------------------------------------------------------- PV105
+def test_pv105_modulo_exceeds_table_size(mf, feed_layout):
+    bad = dataclasses.replace(mf, vocab=np.asarray(mf.vocab) * 1000)
+    findings = planverify.verify_model_feed(bad, feed_layout)
+    assert _rules(findings) == ["PV105"]
+    assert len(findings) == mf.config.n_sparse
+
+
+def test_pv105_truncated_vocab_vector(mf, feed_layout):
+    bad = dataclasses.replace(mf, vocab=np.asarray(mf.vocab)[:2])
+    findings = planverify.verify_model_feed(bad, feed_layout)
+    assert _rules(findings) == ["PV105"]
+    assert len(findings) == mf.config.n_sparse - 2
+
+
+def test_pv105_nonpositive_modulo(mf, feed_layout):
+    vocab = np.array(mf.vocab).copy()
+    vocab[0] = 0
+    bad = dataclasses.replace(mf, vocab=vocab)
+    findings = planverify.verify_model_feed(bad, feed_layout)
+    assert _rules(findings) == ["PV105"]
+
+
+def test_pv105_field_source_out_of_range(mf, feed_layout):
+    sources = np.array(mf.field_sources).copy()
+    sources[0] = mf.n_spec_fields + 5
+    bad = dataclasses.replace(mf, field_sources=sources)
+    findings = planverify.verify_model_feed(bad, feed_layout)
+    assert _rules(findings) == ["PV105"]
+
+
+# ------------------------------------------------------------------- PV106
+def test_pv106_feed_consumes_unstaged_slot(mf, feed_layout):
+    bad = dataclasses.replace(mf, slots=tuple(mf.slots) + ("batch_phantom",))
+    findings = planverify.verify_model_feed(bad, feed_layout)
+    assert _rules(findings) == ["PV106"]
+    assert "batch_phantom" in findings[0].message
+
+
+def test_pv106_packed_layout_satisfies_split_feed(plan, mf):
+    # The feeder derives batch_field_NN views from a packed batch_sparse;
+    # a split-slot feed against the packed layout is therefore legal.
+    packed = plan.feed_layout(split_sparse_fields=False)
+    assert planverify.verify_model_feed(mf, packed) == []

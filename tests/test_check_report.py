@@ -1,0 +1,96 @@
+"""Finding/Report contract + ``run_check`` end-to-end on the presets."""
+
+import json
+
+import pytest
+
+from repro.check import Finding, Report, run_check
+
+
+def _f(rule="PV101", severity="error", msg="boom"):
+    return Finding(rule=rule, severity=severity, location="here",
+                   message=msg, hint="fix it")
+
+
+# ------------------------------------------------------------------ Finding
+def test_finding_rejects_unknown_severity():
+    with pytest.raises(ValueError):
+        Finding(rule="PV101", severity="fatal", location="x", message="m")
+
+
+def test_finding_render_carries_rule_location_hint():
+    text = _f().render()
+    assert "PV101" in text and "here" in text and "fix it" in text
+
+
+def test_finding_to_dict_roundtrips_through_json():
+    d = json.loads(json.dumps(_f().to_dict()))
+    assert d["rule"] == "PV101" and d["severity"] == "error"
+
+
+# ------------------------------------------------------------- exit contract
+def test_exit_0_when_clean():
+    r = Report()
+    r.record_analyzer("plan", [])
+    assert r.exit_code == 0
+
+
+def test_exit_2_on_error_findings():
+    r = Report()
+    r.record_analyzer("plan", [_f()])
+    assert r.exit_code == 2
+
+
+def test_warnings_do_not_gate():
+    r = Report()
+    r.record_analyzer("plan", [_f(severity="warning")])
+    assert r.exit_code == 0
+    assert len(r.warnings) == 1
+
+
+def test_exit_1_crash_takes_precedence_over_errors():
+    r = Report()
+    r.record_analyzer("plan", [_f()])
+    r.record_crash("effects", RuntimeError("tracer exploded"))
+    assert r.exit_code == 1
+    assert "effects" in r.crashed
+
+
+def test_as_metrics_counts_by_severity():
+    r = Report()
+    r.record_analyzer("plan", [_f(), _f(severity="warning"),
+                               _f(severity="info")])
+    m = r.as_metrics()
+    assert m["errors"] == 1 and m["warnings"] == 1 and m["infos"] == 1
+    assert m["findings"] == 3 and m["exit_code"] == 2
+
+
+def test_to_json_is_stable_and_parseable():
+    r = Report()
+    r.record_analyzer("plan", [_f()])
+    d = json.loads(r.to_json())
+    assert d["n_errors"] == 1
+    assert d["findings"][0]["rule"] == "PV101"
+
+
+# ---------------------------------------------------------------- run_check
+def test_run_check_ads_ctr_is_clean():
+    r = run_check("ads_ctr", "dlrm-mlperf")
+    assert r.exit_code == 0, r.render() + "\n" + "\n".join(
+        f.render() for f in r.findings)
+    assert set(r.analyzers_run) == {"lockset", "plan", "aliasing", "effects"}
+
+
+@pytest.mark.parametrize("preset,arch", [("dlrm", "dlrm-mlperf"),
+                                         ("bst", "bst")])
+def test_run_check_other_presets_clean(preset, arch):
+    # effects lowering is the expensive analyzer; the CI plan-verify job
+    # runs the full set across every preset x arch pair.
+    r = run_check(preset, arch, analyzers=("plan", "aliasing", "lockset"))
+    assert r.exit_code == 0, "\n".join(f.render() for f in r.findings)
+
+
+def test_run_check_records_compile_crash_as_exit_1():
+    r = run_check("no-such-preset", "dlrm-mlperf")
+    assert r.exit_code == 1
+    assert "compile" in r.crashed

@@ -10,7 +10,6 @@ from repro.core import (
     DeviceFeeder,
     FeedError,
     PipelinedRunner,
-    StagedRunner,
     align_up,
 )
 from repro.fe import featureplan, get_spec, list_specs

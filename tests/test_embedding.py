@@ -22,7 +22,6 @@ from repro.embedding import (
     dedup_np,
     init_sparse_adagrad,
     sparse_grad_update,
-    undedup,
 )
 from repro.embedding.table import lookup, lookup_dedup
 

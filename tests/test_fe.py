@@ -8,13 +8,12 @@ import pytest
 hypothesis = pytest.importorskip("hypothesis")
 st = pytest.importorskip("hypothesis.strategies")
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import build_schedule, compile_layers, run_layers, validate_schedule
 from repro.fe.colstore import ColumnStore, RaggedColumn
-from repro.fe.datagen import IMPRESSIONS, gen_views, write_views
-from repro.fe.join import bytes_of, hash_join, join_views, merge_on_instance
+from repro.fe.datagen import IMPRESSIONS, gen_views
+from repro.fe.join import hash_join, merge_on_instance
 from repro.fe.ops import ragged_to_bag, ragged_to_padded, tokenize_hash
 from repro.fe.pipeline_graph import build_fe_graph
 from repro.fe.schema import ColType

@@ -33,7 +33,7 @@ def test_whitespace_table_matches_python_exactly():
     """The vectorized tokenizer's separator set IS ``str.split()``'s: every
     codepoint agrees with ``chr(c).isspace()`` over the whole Unicode range
     (surrogates excluded — they can't appear in well-formed strings)."""
-    ws = set(int(c) for c in _WHITESPACE_CODEPOINTS)
+    ws = {int(c) for c in _WHITESPACE_CODEPOINTS}
     for c in range(0x110000):
         if 0xD800 <= c <= 0xDFFF:
             continue

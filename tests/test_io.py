@@ -1,7 +1,6 @@
 """repro.io: shard format roundtrip, host assignment, streaming loader."""
 
 import os
-import tempfile
 
 import numpy as np
 import pytest
@@ -13,7 +12,6 @@ from repro.io.dataset import (
     ShardDataset,
     ShardInfo,
     assign_shards,
-    write_manifest,
 )
 from repro.io.shardfmt import (
     ShardFormatError,

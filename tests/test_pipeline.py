@@ -5,8 +5,6 @@ import tempfile
 
 from conftest import pipeline_threads_gone
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (
@@ -100,7 +98,7 @@ def test_pipeline_propagates_worker_errors():
         yield {"impressions": None}  # malformed -> FE worker raises
 
     import pytest
-    with pytest.raises(Exception):
+    with pytest.raises(KeyError):  # the malformed batch's missing view
         pipe.run({}, bad_batches())
 
 

@@ -1,7 +1,6 @@
 """Declarative FeatureSpec API: compiler lowering, schedule equivalence with
 the legacy hand-wired graph, scenario presets, projection pushdown."""
 
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

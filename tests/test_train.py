@@ -1,8 +1,6 @@
 """Train substrate: checkpoint/restart, fault handling, compression, loop."""
 
-import os
 import tempfile
-import time
 
 import jax
 import jax.numpy as jnp
