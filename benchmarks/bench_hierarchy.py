@@ -23,6 +23,95 @@ DIM = 32
 BATCH = 8192
 STEPS = 30
 
+# e2e beyond-HBM row: vocab scale x2000 grows the dlrm smoke table to
+# ~520k rows x 17 f32 (~34 MiB) vs an 8 MiB simulated device budget.
+E2E_VOCAB_SCALE = 2000
+E2E_BUDGET_MB = 8.0
+E2E_BATCH = 256
+E2E_STEPS = 12
+
+
+def _e2e_beyond_hbm() -> Dict:
+    """Train a table larger than the simulated device budget end to end:
+    synthetic envs -> HierarchyFeed pull stage (threaded PipelinedRunner)
+    -> fused hierarchy train step -> async write-back -> drain."""
+    import dataclasses
+
+    import jax
+
+    from repro.configs import get_arch
+    from repro.core.pipeline import PipelinedRunner
+    from repro.embedding.psfeed import WS_META, WS_SLOTS, HierarchyFeed
+    from repro.fe.modelfeed import ModelFeed, dedup_capacity_hint
+    from repro.models import recsys as R
+    from repro.train.optimizer import adamw
+
+    cfg = get_arch("dlrm-mlperf").smoke()
+    cfg = dataclasses.replace(cfg, vocab_sizes=tuple(
+        v * E2E_VOCAB_SCALE for v in cfg.vocab_sizes))
+    cfg = dataclasses.replace(
+        cfg, dedup_capacity=dedup_capacity_hint(cfg, E2E_BATCH))
+    mf = ModelFeed(
+        config=cfg, slots=("batch_label", "batch_sparse"), split=False,
+        n_spec_fields=cfg.n_sparse,
+        field_sources=np.arange(cfg.n_sparse),
+        vocab=np.asarray(cfg.vocab_sizes[:cfg.n_sparse], np.int32),
+        dense_from="sparse", seq_from=None,
+        dedup_capacity=cfg.dedup_capacity)
+
+    mt = cfg.multi_table()
+    dim = cfg.embed_dim + 1  # Adagrad accumulator colocated
+    table_mb = int(mt.total_rows) * dim * 4 / 2**20
+    rng_init = 1.0 / np.sqrt(cfg.embed_dim)
+
+    def ps_init(s, e, rng):
+        block = np.empty((e - s, dim), np.float32)
+        block[:, :-1] = rng.uniform(-rng_init, rng_init,
+                                    (e - s, cfg.embed_dim))
+        block[:, -1] = 0.1
+        return block
+
+    ps = HierarchicalPS(os.path.join(tempfile.mkdtemp(), "e2e.bin"),
+                        total_rows=int(mt.total_rows), dim=dim,
+                        host_cache_rows=50_000, init_fn=ps_init)
+    hier = HierarchyFeed(ps, mf)
+
+    opt = adamw(1e-3)
+    raw_step, _, _ = R.make_hierarchy_train_step(cfg, opt)
+    params = R.init_params(cfg, jax.random.PRNGKey(0), include_embed=False)
+    state = {"params": params, "opt": {"dense": opt.init(params)}}
+    fused = mf.make_step(raw_step, extra_slots=WS_SLOTS)
+
+    losses: List[float] = []
+
+    def step_fn(st, env):
+        p, o, m = fused(st["params"], st["opt"], env)
+        hier.complete(env[WS_META], m.pop("ws_rows"), m.pop("ws_accum"))
+        losses.append(float(m["loss"]))
+        return {"params": p, "opt": o}
+
+    rng = np.random.default_rng(0)
+    envs = [{"batch_sparse": rng.integers(0, 1 << 30, (E2E_BATCH, cfg.n_sparse)
+                                          ).astype(np.int64),
+             "batch_label": (rng.random(E2E_BATCH) < 0.25).astype(np.float32)}
+            for _ in range(E2E_STEPS)]
+    runner = PipelinedRunner([], step_fn, ps_feed=hier)
+    t0 = time.perf_counter()
+    runner.run(state, envs)
+    hier.drain()
+    dt = time.perf_counter() - t0
+    assert losses[-1] < losses[0], "beyond-HBM training must reduce loss"
+    assert table_mb > E2E_BUDGET_MB
+    s = runner.stats
+    return {
+        "name": "ps_e2e_beyond_hbm",
+        "us_per_call": dt / E2E_STEPS * 1e6,
+        "derived": (f"table={table_mb:.1f}MiB > budget={E2E_BUDGET_MB:.0f}MiB "
+                    f"loss {losses[0]:.3f}->{losses[-1]:.3f} "
+                    f"hit_rate={ps.stats.host_hit_rate:.2f} "
+                    f"ps_stage={s.ps_seconds:.2f}s of wall={s.wall_seconds:.2f}s"),
+    }
+
 
 def run() -> List[Dict]:
     rng = np.random.default_rng(0)
@@ -53,4 +142,6 @@ def run() -> List[Dict]:
                         f"ssd_reads/step={ps.stats.ssd_reads//STEPS} "
                         f"pulled_rows/step={ps.stats.pulled_rows//STEPS}"),
         })
+
+    out.append(_e2e_beyond_hbm())
     return out

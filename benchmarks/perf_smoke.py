@@ -118,6 +118,70 @@ def main() -> None:
           f"unique_ratio={tf.unique_ratio:.3f} "
           f"(capacity={cfg.dedup_capacity}), adapt==ref bitwise")
 
+    # --- hierarchical-PS pull overlap -------------------------------------
+    # The PS-feeder stage must pull batch i+1's working set WHILE batch i
+    # trains: gate on the traced ps.pull x train.step overlap being real.
+    from repro.embedding.hierarchy import HierarchicalPS
+    from repro.embedding.psfeed import WS_META, WS_SLOTS, HierarchyFeed
+    from repro.fe.modelfeed import ModelFeed, dedup_capacity_hint
+    from repro.obs.trace import Tracer, set_tracer
+    from repro.obs.validate import overlap_seconds, span_intervals
+
+    hcfg = get_arch("dlrm-mlperf").smoke()
+    hcfg = dataclasses.replace(hcfg, vocab_sizes=tuple(
+        v * 50 for v in hcfg.vocab_sizes))
+    hcfg = dataclasses.replace(
+        hcfg, dedup_capacity=dedup_capacity_hint(hcfg, 512))
+    hmf = ModelFeed(
+        config=hcfg, slots=("batch_label", "batch_sparse"), split=False,
+        n_spec_fields=hcfg.n_sparse, field_sources=np.arange(hcfg.n_sparse),
+        vocab=np.asarray(hcfg.vocab_sizes[:hcfg.n_sparse], np.int32),
+        dense_from="sparse", seq_from=None,
+        dedup_capacity=hcfg.dedup_capacity)
+    import os
+    import tempfile
+    mt = hcfg.multi_table()
+    ps = HierarchicalPS(os.path.join(tempfile.mkdtemp(), "ps.bin"),
+                        total_rows=int(mt.total_rows),
+                        dim=hcfg.embed_dim + 1, host_cache_rows=2048)
+    hier = HierarchyFeed(ps, hmf)
+    hraw, _, _ = R.make_hierarchy_train_step(hcfg, opt)
+    hparams = R.init_params(hcfg, jax.random.PRNGKey(0), include_embed=False)
+    hstep = hmf.make_step(hraw, extra_slots=WS_SLOTS)
+
+    def hstep_fn(state, e):
+        p, o, m = hstep(state["params"], state["opt"], e)
+        hier.complete(e[WS_META], m.pop("ws_rows"), m.pop("ws_accum"))
+        float(m["loss"])
+        return {"params": p, "opt": o}
+
+    rng = np.random.default_rng(0)
+    henvs = [{"batch_sparse": rng.integers(0, 1 << 30, (512, hcfg.n_sparse)
+                                           ).astype(np.int64),
+              "batch_label": (rng.random(512) < 0.25).astype(np.float32)}
+             for _ in range(8)]
+    tracer = Tracer(enabled=True)
+    set_tracer(tracer)
+    try:
+        runner3 = PipelinedRunner([], hstep_fn, ps_feed=hier)
+        runner3.run({"params": hparams, "opt": {"dense": opt.init(hparams)}},
+                    henvs)
+        hier.drain()
+    finally:
+        set_tracer(Tracer(enabled=False))
+    trace = tracer.to_dict()
+    pulls = span_intervals(trace, "ps.pull")
+    assert len(pulls) == 8, f"expected 8 ps.pull spans, got {len(pulls)}"
+    ov = overlap_seconds(trace, "ps.pull", "train.step")
+    pull_total = sum(t1 - t0 for t0, t1, _, _ in pulls) / 1e6
+    assert ov > 0, (
+        "no ps.pull overlapped any train.step: the hierarchical-PS "
+        "prefetch stage is not pulling batch i+1 while batch i trains")
+    print(f"hierarchy: pull-overlap={ov * 1e3:.2f}ms "
+          f"({ov / max(pull_total, 1e-9):.0%} of {pull_total * 1e3:.2f}ms "
+          f"pulled) across {len(pulls)} steps, "
+          f"hit_rate={ps.stats.host_hit_rate:.2f}")
+
     # --- vectorized host ops ----------------------------------------------
     strings = views["user_profile"]["query_text"]
     a = tokenize_hash(strings, field_size=1 << 20, ngrams=2)

@@ -67,9 +67,10 @@ from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 from repro.check.findings import Finding
 
-# Audited by default: the three files owning the pipeline's thread-shared
+# Audited by default: the files owning the pipeline's thread-shared
 # state (relative to the repro package root).
-DEFAULT_FILES = ("core/pipeline.py", "core/devicefeed.py", "io/stream.py")
+DEFAULT_FILES = ("core/pipeline.py", "core/devicefeed.py", "io/stream.py",
+                 "embedding/psfeed.py")
 
 _DECOS = {"guarded_by", "shared_entry", "single_writer"}
 _CTOR = {"__init__", "__post_init__"}

@@ -52,6 +52,9 @@ class PipelineStats:
     batches: int = 0
     fe_seconds: float = 0.0
     train_seconds: float = 0.0
+    # PS-feeder stage only (hierarchical embedding backend): thread time
+    # spent pulling working sets + waiting on write-back consistency.
+    ps_seconds: float = 0.0
     # StagedRunner only: time draining the batch source up front (disk reads
     # with no compute overlap). Accounted so wall == fe + train + drain +
     # small overhead instead of misreading the gap as overhead.
@@ -70,6 +73,9 @@ class PipelineStats:
     # ratio) are attached here after run(), splitting "adapt" out of the
     # train bucket.
     train_feed: Optional[Any] = None
+    # When a HierarchyFeed pulled working sets (ps_feed stage), its
+    # PsFeedStats + the PS TierStats are attached here after run().
+    ps: Optional[Any] = None
 
     @property
     def adapt_seconds(self) -> float:
@@ -92,9 +98,11 @@ class PipelineStats:
 
     @property
     def busy_seconds(self) -> float:
-        """Stage time summed across threads: fe + train + drain. Exceeds
-        wall exactly when pipelining hid stage time behind another stage."""
-        return self.fe_seconds + self.train_seconds + self.drain_seconds
+        """Stage time summed across threads: fe + ps + train + drain.
+        Exceeds wall exactly when pipelining hid stage time behind another
+        stage."""
+        return (self.fe_seconds + self.ps_seconds + self.train_seconds
+                + self.drain_seconds)
 
     @property
     def overhead_seconds(self) -> float:
@@ -153,14 +161,21 @@ def _capture_train_feed(stats: PipelineStats, train_step: Any) -> None:
 # the rest (it only reads them after joining the workers). Any new field
 # written from more than one thread must move to a @guarded_by lock.
 @single_writer("stats.fe_seconds",                       # fe-worker thread
+               "stats.ps_seconds",                       # ps-feeder thread
                "stats.train_seconds", "stats.batches",   # main train loop
-               "stats.wall_seconds", "stats.feed")
+               "stats.wall_seconds", "stats.feed", "stats.ps")
 class PipelinedRunner:
     """FeatureBox: FE for batch i+1 overlaps training on batch i.
 
     With ``device_feed`` set, an H2D staging thread is inserted between the
     FE worker and the train loop (three-stage pipeline); ``None`` keeps the
     two-stage path and hands host environments straight to ``train_step``.
+
+    With ``ps_feed`` set (a :class:`repro.embedding.psfeed.HierarchyFeed`),
+    a PS-pull stage runs between the FE worker and the H2D/train stages:
+    batch i+1's dedup'd working set is pulled from the hierarchical
+    parameter server while batch i trains — the paper's pre-built working
+    parameter set, as a pipeline stage.
     """
 
     def __init__(
@@ -171,12 +186,14 @@ class PipelinedRunner:
         prefetch: int = 2,
         device=None,
         device_feed: Optional[DeviceFeeder] = None,
+        ps_feed: Optional[Callable[[Mapping[str, Any]], Dict[str, Any]]] = None,
     ) -> None:
         self.layers = layers
         self.train_step = train_step
         self.prefetch = prefetch
         self.device = device
         self.device_feed = device_feed
+        self.ps_feed = ps_feed
         self.stats = PipelineStats()
 
     @classmethod
@@ -278,6 +295,35 @@ class PipelinedRunner:
             self._put(out, e, stop)
             self._put(out, _DONE, stop)
 
+    def _ps_worker(self, q: "queue.Queue", out: "queue.Queue",
+                   stop: threading.Event) -> None:
+        """PS stage: pull batch i+1's working set while batch i trains.
+
+        Same pass-through contract as :meth:`_feed_worker` — sentinels and
+        upstream exceptions flow downstream unchanged.
+        """
+        try:
+            while True:
+                try:
+                    item = q.get(timeout=0.1)
+                except queue.Empty:
+                    if stop.is_set():
+                        return
+                    continue
+                if item is _DONE:
+                    self._put(out, _DONE, stop)
+                    return
+                if isinstance(item, BaseException):
+                    self._put(out, item, stop)
+                    continue  # _DONE follows from the FE worker
+                t0 = time.perf_counter()
+                prepared = self.ps_feed(item)
+                self.stats.ps_seconds += time.perf_counter() - t0
+                self._put(out, prepared, stop)
+        except BaseException as e:  # pull/consistency failure: surface it
+            self._put(out, e, stop)
+            self._put(out, _DONE, stop)
+
     def run(self, state: Any, batches: Iterable[Mapping[str, Any]]) -> Any:
         q: "queue.Queue" = queue.Queue(maxsize=self.prefetch)
         stop = threading.Event()
@@ -289,6 +335,18 @@ class PipelinedRunner:
         threads = [worker]
         queues = [q]
         out_q = q
+        if self.ps_feed is not None:
+            # Working sets hold device buffers: keep at most one prepared
+            # batch queued ahead of the train loop (single-batch pull-ahead;
+            # the consistency protocol in HierarchyFeed assumes it).
+            ps_q: "queue.Queue" = queue.Queue(maxsize=1)
+            ps_feeder = threading.Thread(
+                target=self._ps_worker, args=(out_q, ps_q, stop),
+                daemon=True, name="ps-feeder",
+            )
+            threads.append(ps_feeder)
+            queues.append(ps_q)
+            out_q = ps_q
         if self.device_feed is not None:
             # Bounded by the buffer ring: with one batch held by the train
             # loop and one being staged, at most buffers-2 more fit in the
@@ -296,7 +354,7 @@ class PipelinedRunner:
             feed_q: "queue.Queue" = queue.Queue(
                 maxsize=max(1, self.device_feed.buffers - 2))
             feeder = threading.Thread(
-                target=self._feed_worker, args=(q, feed_q, stop),
+                target=self._feed_worker, args=(out_q, feed_q, stop),
                 daemon=True, name="h2d-feeder",
             )
             threads.append(feeder)
@@ -332,6 +390,13 @@ class PipelinedRunner:
                 del item
         finally:
             stop.set()
+            if self.ps_feed is not None:
+                # Unblock a prepare() waiting on a write-back that will
+                # never arrive (duck-typed; HierarchyFeed.close never
+                # raises). Drain/flush is the driver's job, not teardown's.
+                close = getattr(self.ps_feed, "close", None)
+                if close is not None:
+                    close()
             for qq in queues:  # release workers blocked on a full queue
                 try:
                     while True:
@@ -349,6 +414,8 @@ class PipelinedRunner:
                 if not any(t.is_alive() for t in threads):
                     self.device_feed.flush()
                 self.stats.feed = self.device_feed.stats
+            if self.ps_feed is not None and hasattr(self.ps_feed, "as_metrics"):
+                self.stats.ps = self.ps_feed
             self.stats.wall_seconds = time.perf_counter() - t_start
             _capture_ingest(self.stats, batches)
             _capture_train_feed(self.stats, self.train_step)

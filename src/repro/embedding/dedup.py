@@ -24,12 +24,24 @@ compat.install()  # jax.shard_map on older jax
 # Sentinel for unused working-set slots (never a valid row id).
 FILL = jnp.int32(2**31 - 1)
 
+# Legal id range shared by the device and host dedup paths: ids must be in
+# [0, 2**31 - 1). The upper bound is exclusive because FILL == 2**31 - 1 is
+# the padding sentinel — an id equal to it would be indistinguishable from
+# an unused slot.
+MAX_ID = 2**31 - 1
+
 
 def dedup(ids: jax.Array, *, capacity: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Deduplicate a batch of sparse ids into a fixed-capacity working set.
 
     Args:
-      ids: int[ ... ] arbitrary-shape batch of row ids (>= 0).
+      ids: int[ ... ] arbitrary-shape batch of row ids. **Contract:** every
+        id must be in ``[0, MAX_ID)`` (= ``[0, 2**31 - 1)``). This device
+        path cannot check that inside the jit: ids >= 2**31 silently wrap
+        negative under the ``astype(jnp.int32)`` cast, and an id equal to
+        the ``FILL`` sentinel ``2**31 - 1`` would collide with the padding
+        of unused working-set slots. Validate on the host before feeding
+        (the host twin :func:`dedup_np` enforces the same bounds).
       capacity: static upper bound on unique ids (working-set size). Must be
         >= the true unique count; verify with ``count`` downstream.
 
@@ -58,9 +70,26 @@ def expected_unique(rows: int, vocab: int) -> float:
     return vocab * (1.0 - (1.0 - 1.0 / vocab) ** rows)
 
 
-def dedup_np(ids: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
-    """Host dedup (exact size): returns (unique ids, inverse)."""
-    unique, inverse = np.unique(ids.reshape(-1), return_inverse=True)
+def dedup_np(ids: np.ndarray, *, check_bounds: bool = True
+             ) -> Tuple[np.ndarray, np.ndarray]:
+    """Host dedup (exact size): returns (unique ids, inverse).
+
+    Enforces the id-range contract the device path (:func:`dedup`) can only
+    document: ids must be in ``[0, 2**31 - 1)``. Out-of-range ids would wrap
+    negative / collide with ``FILL`` on device, so they are rejected here,
+    at the host boundary, with a clear error instead of silent corruption.
+    """
+    flat = ids.reshape(-1)
+    if check_bounds and flat.size:
+        lo = int(flat.min())
+        hi = int(flat.max())
+        if lo < 0 or hi >= MAX_ID:
+            raise ValueError(
+                f"sparse ids out of range: min={lo} max={hi}, legal range "
+                f"is [0, {MAX_ID}) — ids >= 2**31 wrap negative under the "
+                f"device path's int32 cast and {MAX_ID} collides with the "
+                f"FILL padding sentinel")
+    unique, inverse = np.unique(flat, return_inverse=True)
     return unique.astype(np.int64), inverse.reshape(ids.shape).astype(np.int32)
 
 

@@ -160,10 +160,11 @@ def sparse_grad_update(
     accum_rows = jnp.take(state.accum, safe) + gsq
     scale = lr / (jnp.sqrt(accum_rows) + eps)
     new_rows = jnp.take(params, safe, axis=0) - scale[:, None] * g
-    params = params.at[safe].set(
-        jnp.where(valid > 0, new_rows, jnp.take(params, safe, axis=0))
-    )
-    accum = state.accum.at[safe].set(
-        jnp.where(valid[:, 0] > 0, accum_rows, jnp.take(state.accum, safe))
-    )
+    # Scatter by the raw unique ids with mode="drop": FILL (2**31-1) is out
+    # of bounds for any real table, so padded slots write NOTHING. Routing
+    # pads through index 0 instead (the old ``safe`` scatter) creates
+    # duplicate writes to row 0 that can clobber its real update whenever
+    # row 0 is in the batch alongside padding.
+    params = params.at[unique].set(new_rows, mode="drop")
+    accum = state.accum.at[unique].set(accum_rows, mode="drop")
     return params, SparseAdagradState(accum=accum)

@@ -264,6 +264,37 @@ class ModelFeed:
                             % cfg.vocab_sizes[0]).astype(jnp.int32)
         return batch
 
+    def model_ids_np(self, env: Mapping[str, Any]
+                     ) -> Tuple[np.ndarray, Optional[np.ndarray]]:
+        """Host twin of :meth:`apply`'s *id* arithmetic: the model batch's
+        ``sparse`` (and bst ``seq``) blocks, as numpy, straight from a
+        pre-staging env.
+
+        Integer remap + modulo only, so the values are bitwise-identical to
+        the device path — the hierarchical-PS prefetch stage
+        (:class:`repro.embedding.psfeed.HierarchyFeed`) uses this to build
+        the working set *before* the batch reaches the device.
+        """
+        cfg = self.config
+        if self.split:
+            fields = [np.asarray(env[field_slot(i)])
+                      for i in range(self.n_spec_fields)]
+            sel = np.stack([fields[i] for i in self.field_sources], axis=1)
+            packed = (np.stack(fields, axis=1)
+                      if self.seq_from == "sparse" else None)
+        else:
+            packed = np.asarray(env["batch_sparse"])
+            sel = packed[:, self.field_sources]
+        sparse = (sel % self.vocab).astype(np.int32)
+        seq = None
+        if self.seq_from is not None:
+            src = (np.asarray(env["batch_seq_ids"])
+                   if self.seq_from == "batch_seq_ids" else packed)
+            reps = -(-cfg.seq_len // src.shape[1])
+            seq = (np.tile(src, (1, reps))[:, :cfg.seq_len]
+                   % cfg.vocab_sizes[0]).astype(np.int32)
+        return sparse, seq
+
     def eager_adapt_ops(self, feed: Mapping[str, Any]) -> int:
         """Device dispatches one eager :meth:`apply` costs (jaxpr op count,
         cached — the feed's static shape contract makes it batch-invariant)."""
@@ -276,7 +307,8 @@ class ModelFeed:
     # --------------------------------------------------------------- step
     def make_step(self, train_step: Callable, *, fused: bool = True,
                   donate: bool = True,
-                  fence_cb: Optional[Callable[[Any], None]] = None):
+                  fence_cb: Optional[Callable[[Any], None]] = None,
+                  extra_slots: Tuple[str, ...] = ()):
         """Wrap an unjitted ``(params, opt_state, batch) -> (params,
         opt_state, metrics)`` train step into the compiled boundary step
         ``(params, opt_state, env) -> (params, opt_state, metrics)``.
@@ -290,29 +322,52 @@ class ModelFeed:
         ``fence_cb`` (called with a step output after every call) so the
         feeder's completion gate can account the donated buffers.
 
+        ``extra_slots`` names env slots forwarded *verbatim* into the train
+        step's batch, bypassing :meth:`apply` — the hierarchical-PS backend
+        rides its pulled working-set arrays (``_ws_rows``/``_ws_unique``/...)
+        through the boundary this way. They are part of the donated batch
+        argument, so working-set buffers are donated into the jit like any
+        staged slot.
+
         The returned callable carries ``feed_stats`` (this plan's
         :class:`TrainFeedStats`), which the pipeline runners adopt into
         ``PipelineStats.train_feed``.
         """
         donate_args = (0, 1, 2) if donate else ()
+        extra_slots = tuple(extra_slots)
         if fused:
             def _boundary(params, opt_state, feed):
-                return train_step(params, opt_state, self.apply(feed))
+                batch = self.apply(feed)
+                batch.update({k: feed[k] for k in extra_slots})
+                return train_step(params, opt_state, batch)
             jitted = jax.jit(_boundary, donate_argnums=donate_args)
         else:
             jitted = jax.jit(train_step, donate_argnums=donate_args)
         stats = self.stats
 
+        def _select_with_extras(env):
+            feed = self.select(env)
+            try:
+                feed.update({k: env[k] for k in extra_slots})
+            except KeyError as e:
+                raise ModelFeedError(
+                    f"batch is missing extra slot {e.args[0]!r} (extra "
+                    f"slots: {extra_slots}) — is the working-set prefetch "
+                    f"stage wired in?") from None
+            return feed
+
         def step(params, opt_state, env):
             tracer = get_tracer()
             w0 = tracer.now_ns() if tracer.enabled else 0
             t0 = time.perf_counter()
-            feed = self.select(env)
+            feed = _select_with_extras(env)
             if fused:
                 stats.fused_steps += 1
             else:
-                stats.adapt_dispatches += self.eager_adapt_ops(feed)
+                stats.adapt_dispatches += self.eager_adapt_ops(self.select(env))
+                extras = {k: feed[k] for k in extra_slots}
                 feed = self.apply(feed)  # eager: each op its own dispatch
+                feed.update(extras)
             stats.adapt_seconds += time.perf_counter() - t0
             if tracer.enabled:
                 tracer.complete("train.adapt", w0, tracer.now_ns(),
@@ -339,8 +394,10 @@ class ModelFeed:
         step.feed_stats = stats
         # Expose the underlying jit so drivers/benchmarks can lower it for
         # HLO cost analysis (repro.launch.hlo_stats.step_cost) without
-        # re-deriving the boundary function.
+        # re-deriving the boundary function; select_feed builds the exact
+        # feed argument the jit expects (extra slots included).
         step.jitted = jitted
+        step.select_feed = _select_with_extras
         return step
 
     def _record(self, metrics: Mapping[str, Any]) -> None:

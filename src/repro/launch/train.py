@@ -87,8 +87,10 @@ def run_streaming(args, spec, cfg, state, opt, check_report=None) -> None:
     with the feeder's ``donation_fence`` accounting the reuse.
     """
     import dataclasses
+    import os
 
     from repro.core import DeviceFeeder, PipelinedRunner
+    from repro.embedding.psfeed import WS_META, WS_SLOTS, HierarchyFeed
     from repro.fe import featureplan, get_spec
     from repro.io.dataset import ShardDataset
     from repro.io.stream import StreamingLoader
@@ -135,7 +137,20 @@ def run_streaming(args, spec, cfg, state, opt, check_report=None) -> None:
     mf = plan.model_feed(cfg, split_sparse_fields=split,
                          rows_hint=loader.rows_hint)
     cfg = mf.config
-    raw_step, _, _ = R.make_sparse_train_step(cfg, opt)
+    if args.embedding == "hierarchy":
+        # Embedding rows come from the hierarchical PS (SSD <- host cache
+        # <- per-batch working set), pulled a batch ahead on a dedicated
+        # pipeline stage; the train step consumes them via WS_SLOTS.
+        if not cfg.dedup_capacity:
+            raise SystemExit(
+                "--embedding hierarchy needs a tuned working-set capacity "
+                "and the dataset manifest has no rows hint — regenerate the "
+                "shards (repro.fe.datagen writes the manifest)")
+        raw_step, _, _ = R.make_hierarchy_train_step(cfg, opt)
+        extra_slots = WS_SLOTS
+    else:
+        raw_step, _, _ = R.make_sparse_train_step(cfg, opt)
+        extra_slots = ()
 
     layers = plan.layers
     feeder = None
@@ -155,7 +170,39 @@ def run_streaming(args, spec, cfg, state, opt, check_report=None) -> None:
 
     fused = mf.make_step(
         raw_step, fused=(args.adapt == "fused"), donate=not args.no_donate,
-        fence_cb=(feeder.donation_fence if feeder is not None else None))
+        fence_cb=(feeder.donation_fence if feeder is not None else None),
+        extra_slots=extra_slots)
+
+    hier = None
+    if args.embedding == "hierarchy":
+        from repro.embedding.hierarchy import HierarchicalPS
+        mt = cfg.multi_table()
+        total_rows = int(mt.total_rows)
+        dim = cfg.embed_dim + 1  # Adagrad accumulator colocated (last col)
+        ps_dir = args.ps_dir or os.path.join(args.data_dir, "_ps")
+        ps_path = os.path.join(ps_dir, f"{args.arch}.{args.spec}.ps.f32")
+        scale = 1.0 / float(np.sqrt(cfg.embed_dim))
+
+        def ps_init(s, e, rng):
+            block = np.empty((e - s, dim), np.float32)
+            block[:, :-1] = rng.uniform(-scale, scale, (e - s, cfg.embed_dim))
+            block[:, -1] = 0.1  # make_sparse_train_step's embed_accum init
+            return block
+
+        ps = HierarchicalPS(ps_path, total_rows=total_rows, dim=dim,
+                            host_cache_rows=args.host_cache_rows,
+                            init_fn=ps_init)
+        hier = HierarchyFeed(ps, mf)
+        table_mb = total_rows * dim * 4 / 2**20
+        line = (f"ps: table {table_mb:.1f} MiB ({total_rows} rows x {dim} "
+                f"f32), host cache {args.host_cache_rows} rows, "
+                f"SSD tier {ps_path}")
+        if args.device_budget_mb:
+            rel = ("EXCEEDS" if table_mb > args.device_budget_mb
+                   else "fits in")
+            line += (f" — {rel} the simulated device budget "
+                     f"{args.device_budget_mb:.1f} MiB")
+        print(line)
 
     losses = []
     cost_args = []  # (params, opt, feed) ShapeDtypeStructs for --metrics
@@ -165,12 +212,18 @@ def run_streaming(args, spec, cfg, state, opt, check_report=None) -> None:
             # Shapes only (no data, no transfers): enough to lower the
             # boundary jit for HLO cost analysis after the run.
             from repro.launch.hlo_stats import abstractify
-            feed = abstractify(mf.select(env))
+            feed = abstractify(fused.select_feed(env))
             if args.adapt == "eager":
-                feed = jax.eval_shape(mf.apply, feed)
+                extras = {k: feed.pop(k) for k in extra_slots}
+                feed = dict(jax.eval_shape(mf.apply, feed))
+                feed.update(extras)
             p, o = abstractify((state["params"], state["opt"]))
             cost_args.append((p, o, feed))
         p, o, m = fused(state["params"], state["opt"], env)
+        if hier is not None:
+            # Async write-back: hand the updated working set to the PS
+            # writer thread; the pull for batch i+2 waits on it, not us.
+            hier.complete(env[WS_META], m.pop("ws_rows"), m.pop("ws_accum"))
         losses.append(float(m["loss"]))
         state = {"params": p, "opt": o}
         if ckpt is not None and len(losses) % args.checkpoint_every == 0:
@@ -180,7 +233,8 @@ def run_streaming(args, spec, cfg, state, opt, check_report=None) -> None:
     step_fn.feed_stats = mf.stats  # runners adopt the train-feed tier
 
     runner = PipelinedRunner(layers, step_fn,
-                             prefetch=args.stream_prefetch, device_feed=feeder)
+                             prefetch=args.stream_prefetch,
+                             device_feed=feeder, ps_feed=hier)
     shard_iter = iter(loader)  # kept so the generator can be closed below
     t0 = time.perf_counter()
     try:
@@ -194,6 +248,10 @@ def run_streaming(args, spec, cfg, state, opt, check_report=None) -> None:
         except ValueError:  # FE worker still holds it (join timed out)
             pass
         loader.close()
+        if hier is not None:
+            # Drain/flush handshake: every enqueued write-back lands on the
+            # SSD tier before we read stats or exit (idempotent, no-raise).
+            hier.drain()
         if ckpt is not None:
             ckpt.wait()
     # islice hides the loader from the runner's duck-typed stats capture
@@ -213,6 +271,8 @@ def run_streaming(args, spec, cfg, state, opt, check_report=None) -> None:
     if s.train_feed is not None:
         print(f"train-feed: {s.train_feed.summary()} "
               f"(capacity={cfg.dedup_capacity})")
+    if hier is not None:
+        print(f"ps: {hier.summary()} ps_stage={s.ps_seconds:.2f}s")
     if args.metrics:
         from repro.launch.hlo_stats import step_cost
         from repro.obs import MetricsRegistry
@@ -262,6 +322,27 @@ def main() -> None:
                          "into the arena (zero-copy feed, no env->arena "
                          "memcpy) as per-field id vectors for the dedup'd "
                          "embedding feed")
+    ap.add_argument("--embedding", default="table",
+                    choices=["table", "hierarchy"],
+                    help="embedding backend: 'table' keeps the full table "
+                         "in device memory; 'hierarchy' serves it from the "
+                         "hierarchical PS (SSD memmap <- host LRU cache <- "
+                         "per-batch working set) with the pull for batch "
+                         "i+1 overlapping batch i's train step — tables "
+                         "larger than device memory train end to end "
+                         "(streaming --data-dir mode, recsys only)")
+    ap.add_argument("--ps-dir", default=None,
+                    help="directory for the hierarchical PS table file "
+                         "(default: <data-dir>/_ps)")
+    ap.add_argument("--host-cache-rows", type=int, default=100_000,
+                    help="hierarchical PS host-DRAM cache capacity in rows")
+    ap.add_argument("--device-budget-mb", type=float, default=None,
+                    help="simulated device-memory budget: print whether the "
+                         "PS table exceeds it (the beyond-HBM demo line)")
+    ap.add_argument("--vocab-scale", type=float, default=1.0,
+                    help="scale every sparse vocab by this factor (recsys): "
+                         "grows the embedding table past any device budget "
+                         "without changing the batch shapes")
     ap.add_argument("--adapt", default="fused", choices=["fused", "eager"],
                     help="spec->arch batch adaptation: 'fused' traces the "
                          "compiled ModelFeed plan inside the train step's "
@@ -330,6 +411,28 @@ def _preflight(args, spec):
 def _run(args) -> None:
     spec = get_arch(args.arch)
     cfg = spec.smoke()
+    if args.vocab_scale != 1.0:
+        if spec.family != "recsys":
+            raise SystemExit("--vocab-scale only applies to recsys archs")
+        if args.vocab_scale <= 0:
+            raise SystemExit("--vocab-scale must be > 0")
+        import dataclasses
+        cfg = dataclasses.replace(cfg, vocab_sizes=tuple(
+            max(1, int(v * args.vocab_scale)) for v in cfg.vocab_sizes))
+    if args.embedding == "hierarchy":
+        if spec.family != "recsys":
+            raise SystemExit(
+                "--embedding hierarchy is a recsys embedding backend "
+                f"(got family={spec.family!r})")
+        if not args.data_dir:
+            raise SystemExit(
+                "--embedding hierarchy runs on the streaming pipeline: "
+                "pass --data-dir (the PS pull is a pipeline stage)")
+        if args.device_feed == "arena":
+            raise SystemExit(
+                "--embedding hierarchy is incompatible with --device-feed "
+                "arena (the zero-copy arena assembles per-field id vectors "
+                "for the in-memory dedup'd lookup); use on/off")
     key = jax.random.PRNGKey(0)
     opt = adamw(args.lr)
     check_report = _preflight(args, spec) if args.check else None
@@ -341,10 +444,19 @@ def _run(args) -> None:
         opt_state = opt.init(params)
     elif spec.family == "recsys":
         from repro.models import recsys as R
-        params = R.init_params(cfg, key)
-        step_fn, init_st, _ = R.make_sparse_train_step(cfg, opt)
-        train_step = jax.jit(step_fn)
-        opt_state = init_st(params)
+        if args.embedding == "hierarchy":
+            # Embedding rows live in the PS file, not in params: dense tree
+            # only (same fold_in enumeration, so dense init is bitwise
+            # identical to the in-memory backend); the hierarchy train step
+            # is compiled in run_streaming with the data-tuned capacity.
+            params = R.init_params(cfg, key, include_embed=False)
+            train_step = None
+            opt_state = {"dense": opt.init(params)}
+        else:
+            params = R.init_params(cfg, key)
+            step_fn, init_st, _ = R.make_sparse_train_step(cfg, opt)
+            train_step = jax.jit(step_fn)
+            opt_state = init_st(params)
     else:
         from repro.models import gnn as G
         params = G.init_params(cfg, key)

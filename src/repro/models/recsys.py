@@ -142,9 +142,17 @@ def abstract_params(c: RecsysConfig) -> Params:
     return {k: jax.ShapeDtypeStruct(s, c.dtype) for k, s in param_shapes(c).items()}
 
 
-def init_params(c: RecsysConfig, key: jax.Array) -> Params:
+def init_params(c: RecsysConfig, key: jax.Array, *,
+                include_embed: bool = True) -> Params:
+    """Materialize params. ``include_embed=False`` skips the embedding table
+    (the hierarchical-PS path keeps it on SSD/host, never in device memory)
+    while leaving every dense param bitwise identical to the full init —
+    the fold_in indices are enumeration positions over the *full* shape
+    dict, not the filtered one."""
     params: Params = {}
     for i, (name, shape) in enumerate(param_shapes(c).items()):
+        if name == "embed" and not include_embed:
+            continue
         k = jax.random.fold_in(key, i)
         if name == "embed":
             scale = 1.0 / np.sqrt(c.embed_dim)
@@ -433,11 +441,15 @@ def make_sparse_train_step(c: RecsysConfig, dense_optimizer, *,
         accum_rows = jnp.take(opt_state["embed_accum"], safe) + gsq
         scale = embed_lr / (jnp.sqrt(accum_rows) + embed_eps)
         new_rows = (working.astype(jnp.float32) - scale[:, None] * gw)
-        embed = params["embed"].at[safe].set(
-            jnp.where(valid > 0, new_rows.astype(params["embed"].dtype), working))
-        accum = opt_state["embed_accum"].at[safe].set(
-            jnp.where(valid[:, 0] > 0, accum_rows,
-                      jnp.take(opt_state["embed_accum"], safe)))
+        # mode="drop": FILL ids are out of bounds, so padded slots write
+        # nothing. Scattering via ``safe`` would alias every pad slot onto
+        # row 0 and could clobber row 0's real update (duplicate-index
+        # scatter order is unspecified) — observed as a one-row divergence
+        # from the hierarchical-PS path, which pads host-side and never
+        # pushes pad slots.
+        embed = params["embed"].at[unique].set(
+            new_rows.astype(params["embed"].dtype), mode="drop")
+        accum = opt_state["embed_accum"].at[unique].set(accum_rows, mode="drop")
 
         new_params = dict(new_dense)
         new_params["embed"] = embed
@@ -447,6 +459,95 @@ def make_sparse_train_step(c: RecsysConfig, dense_optimizer, *,
         metrics = {"loss": loss, "unique": n_unique,
                    "n_ids": jnp.int32(flat_all.shape[0])}
         return new_params, {"dense": new_dense_state, "embed_accum": accum}, metrics
+
+    return train_step, init, abstract_state
+
+
+def gid_site_shapes(c: RecsysConfig, batch: Dict[str, Any]) -> Dict[str, Tuple[int, ...]]:
+    """Shapes of :func:`collect_gids`'s per-site id arrays, without tracing
+    the id arithmetic. Shared by the hierarchy train step (which splits a
+    host-computed inverse back per site) and its host twin
+    :func:`repro.embedding.psfeed.collect_gids_np` — the flat concat order
+    is ``sorted(sites)`` in both."""
+    if c.kind == "bst":
+        b, l = batch["seq"].shape
+        return {"other": (b, c.n_sparse - 1), "seq": (b, l + 1)}
+    return {"sparse": tuple(batch["sparse"].shape)}
+
+
+def make_hierarchy_train_step(c: RecsysConfig, dense_optimizer, *,
+                              embed_lr: float = 0.01, embed_eps: float = 1e-10):
+    """Working-set train step for the hierarchical PS backend.
+
+    Same arithmetic as :func:`make_sparse_train_step`, but the working set
+    arrives *in the batch* (pulled host-side by
+    :class:`repro.embedding.psfeed.HierarchyFeed`) instead of being gathered
+    from a device-resident table:
+
+    * ``_ws_rows``    f32[cap, D]  pulled working rows (FILL slots padded);
+    * ``_ws_accum``   f32[cap]     pulled Adagrad accumulators;
+    * ``_ws_unique``  int32[cap]   unique global ids, FILL-padded;
+    * ``_ws_inverse`` int32[N]     flat inverse over the sorted-site concat.
+
+    ``params`` carries the dense tree only (no ``"embed"``); the updated
+    rows/accumulators come back in the metrics (``ws_rows``/``ws_accum``)
+    for the async write-back ``push()``. For valid (non-FILL) slots the
+    loss and row updates are bitwise-identical to the in-memory step as
+    long as the pulled rows/accumulators match the table — asserted in
+    ``tests/test_hierarchy.py``.
+    """
+    FILL = jnp.int32(2**31 - 1)
+
+    def init(params):
+        return {"dense": dense_optimizer.init(params)}
+
+    def abstract_state(params):
+        return {"dense": dense_optimizer.abstract_state(params)}
+
+    def train_step(params, opt_state, batch):
+        working = batch["_ws_rows"]
+        unique = batch["_ws_unique"]
+        inverse = batch["_ws_inverse"]
+        shapes = gid_site_shapes(c, batch)
+        sites = sorted(shapes)
+
+        inv_by_site = {}
+        off = 0
+        for s in sites:
+            n = int(np.prod(shapes[s]))
+            inv_by_site[s] = inverse[off: off + n].reshape(shapes[s])
+            off += n
+
+        def local_loss(dense_p, working_rows):
+            rows = {f"_rows_{s}": jnp.take(working_rows, inv_by_site[s], axis=0)
+                    for s in sites}
+            b2 = dict(batch)
+            b2.update(rows)
+            logits = forward(dict(dense_p), c, b2)
+            return sigmoid_bce(logits, batch["label"]).mean()
+
+        loss, (gd, gw) = jax.value_and_grad(local_loss, argnums=(0, 1))(
+            params, working)
+
+        new_dense, new_dense_state = dense_optimizer.update(
+            params, gd, opt_state["dense"])
+
+        # Adagrad on working rows only (same math as the in-memory step;
+        # padded FILL slots carry zero grads and keep their pulled values).
+        gw = gw.astype(jnp.float32)
+        valid = (unique != FILL).astype(jnp.float32)[:, None]
+        gw = gw * valid
+        gsq = jnp.sum(gw * gw, axis=-1)
+        accum_rows = batch["_ws_accum"] + gsq
+        scale = embed_lr / (jnp.sqrt(accum_rows) + embed_eps)
+        new_rows = (working.astype(jnp.float32) - scale[:, None] * gw)
+        new_rows = jnp.where(valid > 0, new_rows, working)
+
+        metrics = {"loss": loss,
+                   "unique": jnp.sum(unique != FILL).astype(jnp.int32),
+                   "n_ids": jnp.int32(inverse.shape[0]),
+                   "ws_rows": new_rows, "ws_accum": accum_rows}
+        return new_dense, {"dense": new_dense_state}, metrics
 
     return train_step, init, abstract_state
 

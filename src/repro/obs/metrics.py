@@ -128,7 +128,7 @@ class MetricsRegistry:
         exec_stats = getattr(stats, "exec_stats", None)
         if exec_stats is not None:
             reg.register("exec", exec_stats)
-        for tier in ("ingest", "feed", "train_feed"):
+        for tier in ("ingest", "feed", "train_feed", "ps"):
             obj = getattr(stats, tier, None)
             if obj is not None:
                 reg.register(tier, obj)
@@ -149,6 +149,7 @@ def pipeline_rollup(stats: Any) -> Dict[str, Number]:
     ingest = getattr(stats, "ingest", None)
     feed = getattr(stats, "feed", None)
     tf = getattr(stats, "train_feed", None)
+    ps = getattr(stats, "ps", None)
     wall = float(getattr(stats, "wall_seconds", 0.0))
     out: Dict[str, Number] = {
         "wall_seconds": wall,
@@ -175,6 +176,11 @@ def pipeline_rollup(stats: Any) -> Dict[str, Number]:
         "stall_h2d_reclaim_seconds":
             float(getattr(feed, "stall_seconds", 0.0)) if feed else 0.0,
         "dedup_unique_ratio": float(getattr(tf, "unique_ratio", 0.0)) if tf else 0.0,
+        # hierarchical-PS tier (0 when the embedding backend is in-memory)
+        "ps_pull_seconds": float(getattr(ps, "pull_seconds", 0.0)) if ps else 0.0,
+        "ps_wait_seconds": float(getattr(ps, "wait_seconds", 0.0)) if ps else 0.0,
+        "ps_host_hit_rate": float(getattr(ps, "host_hit_rate", 0.0)) if ps else 0.0,
+        "ps_evictions": int(getattr(ps, "evictions", 0)) if ps else 0,
     }
     if wall > 0:
         for stage in ("disk", "fe", "h2d", "train"):

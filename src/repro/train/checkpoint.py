@@ -34,13 +34,22 @@ def _flatten(tree) -> List[Tuple[str, Any]]:
 
 class CheckpointManager:
     def __init__(self, directory: str, *, keep: int = 3, host_id: int = 0):
+        if keep < 1:
+            raise ValueError(
+                f"keep must be >= 1 (retention keeps the newest K "
+                f"checkpoints; keep={keep} would silently disable GC)")
         self.directory = directory
         self.keep = keep
         self.host_id = host_id
         os.makedirs(directory, exist_ok=True)
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
-        self.stats = {"saves": 0, "restores": 0, "save_seconds": 0.0}
+        self.stats = {"saves": 0, "restores": 0, "save_seconds": 0.0,
+                      "stale_tmp_swept": 0}
+        # A save that crashed before its atomic rename leaves a temp dir
+        # behind; sweep this host's stale temps at startup (and on every GC)
+        # so they cannot accumulate forever.
+        self._sweep_stale_tmp()
 
     # ------------------------------------------------------------------ save
     def save(self, step: int, tree: Any) -> str:
@@ -60,8 +69,15 @@ class CheckpointManager:
         if os.path.isdir(final):
             shutil.rmtree(final)
         os.rename(tmp, final)
-        with open(os.path.join(self.directory, MANIFEST), "w") as f:
+        # The latest-step pointer gets the same atomic-commit treatment as
+        # the shard dirs: a crash mid-write must never truncate/corrupt the
+        # manifest the next restart reads. Write-then-replace is atomic on
+        # POSIX; readers see either the old pointer or the new one.
+        manifest_tmp = os.path.join(
+            self.directory, f".{MANIFEST}.h{self.host_id}.tmp")
+        with open(manifest_tmp, "w") as f:
             json.dump({"latest_step": step}, f)
+        os.replace(manifest_tmp, os.path.join(self.directory, MANIFEST))
         self._gc()
         self.stats["saves"] += 1
         self.stats["save_seconds"] += time.perf_counter() - t0
@@ -130,7 +146,29 @@ class CheckpointManager:
                 out.append(int(d.split("_", 1)[1]))
         return sorted(out)
 
+    def _sweep_stale_tmp(self) -> None:
+        """Remove leftover temp artifacts of crashed saves (this host only).
+
+        Saves are serialized per manager (``save_async`` keeps one in
+        flight), so any matching ``.tmp_step_*_h<id>`` dir or manifest temp
+        found here is a dead save, not an in-progress one.
+        """
+        suffix = f"_h{self.host_id}"
+        manifest_tmp = f".{MANIFEST}.h{self.host_id}.tmp"
+        for d in os.listdir(self.directory):
+            path = os.path.join(self.directory, d)
+            if d.startswith(".tmp_step_") and d.endswith(suffix):
+                shutil.rmtree(path, ignore_errors=True)
+                self.stats["stale_tmp_swept"] += 1
+            elif d == manifest_tmp:
+                try:
+                    os.unlink(path)
+                    self.stats["stale_tmp_swept"] += 1
+                except OSError:
+                    pass
+
     def _gc(self) -> None:
         steps = self._steps_on_disk()
-        for s in steps[: -self.keep] if self.keep else []:
+        for s in steps[: -self.keep]:
             shutil.rmtree(self._step_dir(s), ignore_errors=True)
+        self._sweep_stale_tmp()

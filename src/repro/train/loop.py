@@ -53,6 +53,7 @@ def run_training(
     fe_layers: Optional[List[LayerExecutable]] = None,
     loss_of: Callable[[Any], float] = None,
     ckpt: Optional[CheckpointManager] = None,
+    finalize: Optional[Callable[[], Any]] = None,
 ) -> tuple:
     """Run (or resume) a training job.
 
@@ -60,6 +61,9 @@ def run_training(
     returns (state, metrics); ``batch_source(step)`` yields the raw batch for
     a step (deterministic per step so restart replays data exactly);
     ``fe_layers`` optionally runs the FeatureBox schedule on each raw batch.
+    ``finalize`` (if given) runs on every exit path, after the loop but
+    before the final checkpoint — PS-backed train steps pass their feed's
+    ``drain`` here so all async write-backs land before state is captured.
     """
     stats = LoopStats()
     if ckpt is None and cfg.checkpoint_dir:
@@ -74,25 +78,29 @@ def run_training(
             stats.restarts += 1
 
     tracer = get_tracer()
-    for step in range(start_step, cfg.n_steps):
-        t0 = time.perf_counter()
-        with (tracer.span("fe.batch", step=step)
-              if tracer.enabled else NULL_SPAN):
-            batch = dict(batch_source(step))
-            if fe_layers is not None:
-                batch = run_layers(fe_layers, batch)
-        t1 = time.perf_counter()
-        with (tracer.span("train.step", step=step)
-              if tracer.enabled else NULL_SPAN):
-            state, metrics = train_step(state, batch)
-        t2 = time.perf_counter()
-        stats.fe_seconds += t1 - t0
-        stats.train_seconds += t2 - t1
-        stats.steps += 1
-        if metrics and "loss" in metrics:
-            stats.losses.append(float(metrics["loss"]))
-        if ckpt is not None and (step + 1) % cfg.checkpoint_every == 0:
-            ckpt.save_async(step, state)
+    try:
+        for step in range(start_step, cfg.n_steps):
+            t0 = time.perf_counter()
+            with (tracer.span("fe.batch", step=step)
+                  if tracer.enabled else NULL_SPAN):
+                batch = dict(batch_source(step))
+                if fe_layers is not None:
+                    batch = run_layers(fe_layers, batch)
+            t1 = time.perf_counter()
+            with (tracer.span("train.step", step=step)
+                  if tracer.enabled else NULL_SPAN):
+                state, metrics = train_step(state, batch)
+            t2 = time.perf_counter()
+            stats.fe_seconds += t1 - t0
+            stats.train_seconds += t2 - t1
+            stats.steps += 1
+            if metrics and "loss" in metrics:
+                stats.losses.append(float(metrics["loss"]))
+            if ckpt is not None and (step + 1) % cfg.checkpoint_every == 0:
+                ckpt.save_async(step, state)
+    finally:
+        if finalize is not None:
+            finalize()
     if ckpt is not None:
         ckpt.wait()
         ckpt.save(cfg.n_steps - 1, state)

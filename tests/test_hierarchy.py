@@ -1,0 +1,418 @@
+"""Hierarchical-PS streaming backend: psfeed protocol, checkpoint/dedup
+seam fixes, and bitwise equivalence against the in-memory table path."""
+
+import json
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import get_arch
+from repro.core.pipeline import PipelinedRunner
+from repro.embedding.dedup import MAX_ID, dedup_np
+from repro.embedding.hierarchy import HierarchicalPS
+from repro.embedding.psfeed import (
+    WS_META,
+    WS_SLOTS,
+    HierarchyFeed,
+    HierarchyFeedError,
+    collect_gids_np,
+)
+from repro.fe.modelfeed import ModelFeed, ModelFeedError
+from repro.models import recsys as R
+from repro.train.checkpoint import CheckpointManager
+from repro.train.optimizer import adamw
+
+import dataclasses
+
+
+# ------------------------------------------------------------------ helpers
+def _feed(cfg) -> ModelFeed:
+    """Direct ModelFeed over packed synthetic envs (no FE plan needed)."""
+    return ModelFeed(
+        config=cfg, slots=("batch_label", "batch_sparse"), split=False,
+        n_spec_fields=cfg.n_sparse,
+        field_sources=np.arange(cfg.n_sparse),
+        vocab=np.asarray(cfg.vocab_sizes[:cfg.n_sparse], np.int32),
+        dense_from="sparse" if cfg.n_dense else None,
+        seq_from="sparse" if cfg.kind == "bst" else None,
+        dedup_capacity=cfg.dedup_capacity)
+
+
+def _ps_from_table(tmpdir, cfg, embed, accum, *, host_cache_rows=1 << 20):
+    """PS file seeded with the in-memory table's rows + Adagrad column."""
+    arr = np.concatenate([np.asarray(embed, np.float32),
+                          np.asarray(accum, np.float32)[:, None]], axis=1)
+    path = os.path.join(str(tmpdir), "ps.bin")
+    arr.tofile(path)
+    return HierarchicalPS(path, total_rows=arr.shape[0], dim=arr.shape[1],
+                          host_cache_rows=host_cache_rows)
+
+
+def _envs(cfg, n, batch=16, seed=0):
+    rng = np.random.default_rng(seed)
+    return [{"batch_sparse": rng.integers(0, 1 << 30, (batch, cfg.n_sparse)
+                                          ).astype(np.int64),
+             "batch_label": (rng.random(batch) < 0.25).astype(np.float32)}
+            for _ in range(n)]
+
+
+# ------------------------------------------------- checkpoint seam (satellites)
+def test_checkpoint_keep_zero_rejected(tmp_path):
+    with pytest.raises(ValueError, match="keep"):
+        CheckpointManager(str(tmp_path), keep=0)
+
+
+def test_checkpoint_manifest_crash_preserves_latest(tmp_path, monkeypatch):
+    """A crash mid-manifest-write must leave the previous pointer intact."""
+    from repro.train import checkpoint as C
+    ckpt = CheckpointManager(str(tmp_path))
+    tree = {"w": np.arange(4.0)}
+    ckpt.save(0, tree)
+    assert ckpt.latest_step() == 0
+
+    real_dump = json.dump
+
+    def crashing_dump(obj, f, *a, **k):
+        if isinstance(obj, dict) and obj.get("latest_step") == 1:
+            f.write('{"latest')  # partial bytes, then the "crash"
+            raise OSError("disk died mid-manifest")
+        return real_dump(obj, f, *a, **k)
+
+    monkeypatch.setattr(C.json, "dump", crashing_dump)
+    with pytest.raises(OSError):
+        ckpt.save(1, tree)
+    monkeypatch.undo()
+    # The garbage went to the temp file; the committed manifest still reads.
+    ckpt2 = CheckpointManager(str(tmp_path))
+    assert ckpt2.latest_step() == 0
+    step, restored = ckpt2.restore_latest({"w": np.zeros(4)})
+    assert step == 0
+    np.testing.assert_array_equal(restored["w"], tree["w"])
+    # and the partial temp was swept on init
+    assert not any(".tmp" in d for d in os.listdir(str(tmp_path)))
+
+
+def test_checkpoint_stale_tmp_swept(tmp_path, monkeypatch):
+    """Temp dirs of crashed saves are removed on init and on GC."""
+    stale = tmp_path / ".tmp_step_0000000007_h0"
+    stale.mkdir()
+    (stale / "h0_leaf00000.npy").write_bytes(b"junk")
+    (tmp_path / ".manifest.json.h0.tmp").write_text("{")
+    other_host = tmp_path / ".tmp_step_0000000007_h1"
+    other_host.mkdir()
+
+    ckpt = CheckpointManager(str(tmp_path))
+    assert not stale.exists()
+    assert not (tmp_path / ".manifest.json.h0.tmp").exists()
+    assert other_host.exists()  # another host's save is NOT ours to sweep
+    assert ckpt.stats["stale_tmp_swept"] == 2
+
+    # a save that crashes before its atomic rename leaks a temp dir ...
+    monkeypatch.setattr(os, "rename",
+                        lambda *a: (_ for _ in ()).throw(OSError("crash")))
+    with pytest.raises(OSError):
+        ckpt.save(1, {"w": np.zeros(2)})
+    monkeypatch.undo()
+    def h0_tmps():
+        return [d for d in os.listdir(str(tmp_path))
+                if d.startswith(".tmp_step_") and d.endswith("_h0")]
+
+    assert h0_tmps()
+    # ... which the next successful save's GC removes
+    ckpt.save(2, {"w": np.zeros(2)})
+    assert not h0_tmps()
+
+
+# -------------------------------------------------------- memmap size check
+def test_ps_memmap_size_mismatch_rejected(tmp_path):
+    path = os.path.join(str(tmp_path), "t.bin")
+    HierarchicalPS(path, total_rows=100, dim=8)
+    # same file, different declared shape -> must refuse, with byte counts
+    with pytest.raises(ValueError) as ei:
+        HierarchicalPS(path, total_rows=200, dim=8)
+    msg = str(ei.value)
+    assert str(200 * 8 * 4) in msg and str(100 * 8 * 4) in msg
+    # truncated file -> also refused
+    with open(path, "r+b") as f:
+        f.truncate(100)
+    with pytest.raises(ValueError):
+        HierarchicalPS(path, total_rows=100, dim=8)
+
+
+# ------------------------------------------------------------ dedup id range
+def test_dedup_np_rejects_out_of_range_ids():
+    with pytest.raises(ValueError, match="wrap"):
+        dedup_np(np.array([0, 2**31], np.int64))
+    with pytest.raises(ValueError, match="FILL"):
+        dedup_np(np.array([MAX_ID], np.int64))  # the sentinel itself
+    with pytest.raises(ValueError):
+        dedup_np(np.array([-1, 5], np.int64))
+    # boundary ids are legal; bounds check can be bypassed explicitly
+    u, inv = dedup_np(np.array([0, MAX_ID - 1, 0], np.int64))
+    np.testing.assert_array_equal(u, [0, MAX_ID - 1])
+    np.testing.assert_array_equal(u[inv], [0, MAX_ID - 1, 0])
+    u2, _ = dedup_np(np.array([-5], np.int64), check_bounds=False)
+    assert u2[0] == -5
+
+
+@pytest.mark.parametrize("hi", [100, MAX_ID - 1])
+def test_dedup_np_range_property(hi):
+    rng = np.random.default_rng(0)
+    ids = rng.integers(0, hi + 1, (50,), np.int64)
+    u, inv = dedup_np(ids)
+    np.testing.assert_array_equal(np.sort(np.unique(ids)), u)
+    np.testing.assert_array_equal(u[inv], ids)
+
+
+# -------------------------------------------------- pull/push vs host mirror
+def test_ps_pull_push_matches_mirror_under_eviction(tmp_path):
+    """Reads always reflect the latest pushed rows, however the tiny host
+    cache thrashes (hits, misses, evictions, oversized working sets)."""
+    rows, dim = 64, 5
+    rng = np.random.default_rng(1)
+    init = rng.normal(size=(rows, dim)).astype(np.float32)
+    path = os.path.join(str(tmp_path), "t.bin")
+    init.tofile(path)
+    ps = HierarchicalPS(path, total_rows=rows, dim=dim, host_cache_rows=4)
+    mirror = init.copy()
+    for step in range(30):
+        ids = rng.integers(0, rows, rng.integers(1, 12))
+        got, unique, inverse = ps.pull(ids)
+        np.testing.assert_array_equal(got, mirror[unique])
+        np.testing.assert_array_equal(unique[inverse], ids)
+        newrows = got + np.float32(step + 1)
+        ps.push(unique, newrows)
+        mirror[unique] = newrows
+    assert ps.stats.evictions > 0
+    assert ps.stats.host_hits > 0
+    ps.flush()
+    # SSD tier itself holds the mirror (write-through)
+    np.testing.assert_array_equal(
+        np.fromfile(path, np.float32).reshape(rows, dim), mirror)
+
+
+# -------------------------------------------- host/device gid twin equality
+@pytest.mark.parametrize("arch", ["dlrm-mlperf", "bst"])
+def test_collect_gids_np_matches_device(arch):
+    cfg = get_arch(arch).smoke()
+    rng = np.random.default_rng(2)
+    b = 8
+    sparse = np.stack([rng.integers(0, v, b)
+                       for v in cfg.vocab_sizes[:cfg.n_sparse]],
+                      axis=1).astype(np.int32)
+    batch = {"sparse": sparse}
+    seq = None
+    if cfg.kind == "bst":
+        seq = rng.integers(0, cfg.vocab_sizes[0],
+                           (b, cfg.seq_len)).astype(np.int32)
+        batch["seq"] = seq
+    dev = R.collect_gids(cfg, {k: np.asarray(v) for k, v in batch.items()})
+    host = collect_gids_np(cfg, sparse, seq)
+    assert sorted(dev) == sorted(host)
+    shapes = R.gid_site_shapes(cfg, batch)
+    for site in dev:
+        np.testing.assert_array_equal(np.asarray(dev[site]), host[site])
+        assert tuple(host[site].shape) == shapes[site]
+
+
+# ------------------------------------------- bitwise equivalence (tentpole)
+@pytest.mark.parametrize("arch", ["dlrm-mlperf", "bst"])
+def test_hierarchy_step_bitwise_vs_in_memory(tmp_path, arch):
+    """K steps through HierarchyFeed + make_hierarchy_train_step produce
+    the SAME losses, dense params, and final table rows as the in-memory
+    make_sparse_train_step — bit for bit."""
+    cfg = get_arch(arch).smoke()
+    opt = adamw(1e-3)
+    key = jax.random.PRNGKey(0)
+    params_full = R.init_params(cfg, key)
+    params_dense = R.init_params(cfg, key, include_embed=False)
+    for k in params_dense:  # dense init must not shift without "embed"
+        np.testing.assert_array_equal(np.asarray(params_full[k]),
+                                      np.asarray(params_dense[k]))
+
+    raw_s, init_s, _ = R.make_sparse_train_step(cfg, opt)
+    raw_h, init_h, _ = R.make_hierarchy_train_step(cfg, opt)
+    st_s = init_s(params_full)
+    st_h = init_h(params_dense)
+    ps = _ps_from_table(tmp_path, cfg, params_full["embed"],
+                        np.asarray(st_s["embed_accum"]),
+                        host_cache_rows=8)  # tiny: force SSD traffic
+    mf_s, mf_h = _feed(cfg), _feed(cfg)
+    hier = HierarchyFeed(ps, mf_h)
+    fused_s = mf_s.make_step(raw_s, donate=False)
+    fused_h = mf_h.make_step(raw_h, donate=False, extra_slots=WS_SLOTS)
+
+    for env in _envs(cfg, 5):
+        ps_env = hier.prepare(env)
+        params_dense, st_h, m_h = fused_h(params_dense, st_h, ps_env)
+        hier.complete(ps_env[WS_META], m_h["ws_rows"], m_h["ws_accum"])
+        params_full, st_s, m_s = fused_s(params_full, st_s, env)
+        assert float(m_h["loss"]) == float(m_s["loss"])
+        assert int(m_h["unique"]) == int(m_s["unique"])
+    hier.drain()
+
+    for k in params_dense:
+        np.testing.assert_array_equal(np.asarray(params_full[k]),
+                                      np.asarray(params_dense[k]))
+    table = np.asarray(ps._ssd)
+    np.testing.assert_array_equal(table[:, :-1],
+                                  np.asarray(params_full["embed"]))
+    np.testing.assert_array_equal(table[:, -1],
+                                  np.asarray(st_s["embed_accum"]))
+    assert hier.stats.completed == 5 and ps.stats.pushes == 5
+
+
+# -------------------------------------------- threaded runner == serial run
+def test_threaded_runner_bitwise_vs_serial(tmp_path):
+    """The pipelined (prefetch + async write-back) execution is bitwise
+    identical to serial pull-train-push: the fixup protocol hides latency,
+    not determinism."""
+    cfg = get_arch("dlrm-mlperf").smoke()
+    opt = adamw(1e-3)
+    key = jax.random.PRNGKey(0)
+    envs = _envs(cfg, 6, seed=7)
+
+    def run(threaded: bool):
+        params = R.init_params(cfg, key, include_embed=False)
+        raw_h, init_h, _ = R.make_hierarchy_train_step(cfg, opt)
+        st = init_h(params)
+        embed = np.asarray(
+            R.init_params(cfg, jax.random.PRNGKey(0))["embed"])
+        d = tmp_path / ("t" if threaded else "s")
+        d.mkdir(exist_ok=True)
+        ps = _ps_from_table(d, cfg, embed,
+                            np.full((embed.shape[0],), 0.1, np.float32),
+                            host_cache_rows=16)
+        mf = _feed(cfg)
+        hier = HierarchyFeed(ps, mf)
+        fused = mf.make_step(raw_h, donate=False, extra_slots=WS_SLOTS)
+        losses = []
+
+        def step_fn(state, e):
+            p, o, m = fused(state["params"], state["opt"], e)
+            hier.complete(e[WS_META], m["ws_rows"], m["ws_accum"])
+            losses.append(float(m["loss"]))
+            return {"params": p, "opt": o}
+
+        state = {"params": params, "opt": st}
+        if threaded:
+            runner = PipelinedRunner([], step_fn, ps_feed=hier)
+            runner.run(state, [dict(e) for e in envs])
+            assert runner.stats.ps is hier
+            assert runner.stats.batches == len(envs)
+        else:
+            for e in envs:
+                state = step_fn(state, hier.prepare(dict(e)))
+        hier.drain()
+        ps.flush()
+        return losses, np.asarray(ps._ssd).copy()
+
+    losses_t, table_t = run(threaded=True)
+    losses_s, table_s = run(threaded=False)
+    assert losses_t == losses_s
+    np.testing.assert_array_equal(table_t, table_s)
+
+
+def test_prefetch_fixup_sees_concurrent_push(tmp_path):
+    """A pull issued before the previous step's write-back must be fixed
+    up to the post-push rows before release."""
+    cfg = get_arch("dlrm-mlperf").smoke()
+    embed = np.zeros((int(cfg.multi_table().total_rows), cfg.embed_dim),
+                     np.float32)
+    ps = _ps_from_table(tmp_path, cfg, embed,
+                        np.full((embed.shape[0],), 0.1, np.float32))
+    mf = _feed(cfg)
+    hier = HierarchyFeed(ps, mf)
+    env = _envs(cfg, 1, seed=3)[0]
+
+    out0 = hier.prepare(dict(env))
+    seq0, unique0 = out0[WS_META]
+    n0 = len(unique0)
+
+    box = {}
+
+    def prefetch():
+        box["out"] = hier.prepare(dict(env))  # same ids: all become stale
+
+    t = threading.Thread(target=prefetch)
+    t.start()
+    # wait until the prefetch thread's PULL happened (it then blocks on
+    # the write-back of step 0)
+    deadline = time.time() + 10
+    while hier.stats.batches < 2:
+        assert time.time() < deadline, "prefetch never pulled"
+        time.sleep(0.005)
+    assert t.is_alive()  # blocked on the consistency wait, not done
+
+    pushed_rows = np.full((n0, cfg.embed_dim), 7.5, np.float32)
+    pushed_accum = np.full((n0,), 2.25, np.float32)
+    hier.complete((seq0, unique0), pushed_rows, pushed_accum)
+    t.join(timeout=10)
+    assert not t.is_alive()
+    assert hier.stats.fixups == 1 and hier.stats.fixup_rows == n0
+
+    out1 = box["out"]
+    n1 = len(out1[WS_META][1])
+    np.testing.assert_array_equal(np.asarray(out1["_ws_rows"])[:n1],
+                                  pushed_rows)
+    np.testing.assert_array_equal(np.asarray(out1["_ws_accum"])[:n1],
+                                  pushed_accum)
+    hier.complete(out1[WS_META], out1["_ws_rows"], out1["_ws_accum"])
+    hier.drain()
+
+
+# ------------------------------------------------------------- guard rails
+def test_make_step_missing_extra_slot_errors():
+    cfg = get_arch("dlrm-mlperf").smoke()
+    raw_h, _, _ = R.make_hierarchy_train_step(cfg, adamw(1e-3))
+    mf = _feed(cfg)
+    step = mf.make_step(raw_h, donate=False, extra_slots=WS_SLOTS)
+    with pytest.raises(ModelFeedError, match="extra slot"):
+        step({}, {}, _envs(cfg, 1)[0])  # no _ws_* slots: prefetch not wired
+
+
+def test_working_set_overflow_errors(tmp_path):
+    cfg = dataclasses.replace(get_arch("dlrm-mlperf").smoke(),
+                              dedup_capacity=4)
+    embed = np.zeros((int(cfg.multi_table().total_rows), cfg.embed_dim),
+                     np.float32)
+    ps = _ps_from_table(tmp_path, cfg, embed,
+                        np.zeros((embed.shape[0],), np.float32))
+    hier = HierarchyFeed(ps, _feed(cfg))
+    with pytest.raises(HierarchyFeedError, match="overflow"):
+        hier.prepare(_envs(cfg, 1)[0])
+    hier.drain()
+
+
+def test_ps_metrics_tier_registered(tmp_path):
+    """runner.stats.ps feeds the 'ps' tier + rollup keys of the registry."""
+    from repro.obs.metrics import MetricsRegistry
+    cfg = get_arch("dlrm-mlperf").smoke()
+    embed = np.asarray(R.init_params(cfg, jax.random.PRNGKey(0))["embed"])
+    ps = _ps_from_table(tmp_path, cfg, embed,
+                        np.full((embed.shape[0],), 0.1, np.float32))
+    mf = _feed(cfg)
+    hier = HierarchyFeed(ps, mf)
+    raw_h, init_h, _ = R.make_hierarchy_train_step(cfg, adamw(1e-3))
+    params = R.init_params(cfg, jax.random.PRNGKey(0), include_embed=False)
+    fused = mf.make_step(raw_h, donate=False, extra_slots=WS_SLOTS)
+
+    def step_fn(state, e):
+        p, o, m = fused(state["params"], state["opt"], e)
+        hier.complete(e[WS_META], m["ws_rows"], m["ws_accum"])
+        return {"params": p, "opt": o}
+
+    runner = PipelinedRunner([], step_fn, ps_feed=hier)
+    runner.run({"params": params, "opt": init_h(params)}, _envs(cfg, 3))
+    hier.drain()
+    snap = MetricsRegistry.from_pipeline(runner.stats).snapshot()
+    assert snap["ps.pulls"] == 3 and snap["ps.pushes"] == 3
+    assert snap["ps.batches"] == 3 and snap["ps.completed"] == 3
+    assert snap["rollup.ps_pull_seconds"] >= 0
+    assert 0 <= snap["rollup.ps_host_hit_rate"] <= 1
+    assert snap["pipeline.ps_seconds"] > 0
