@@ -12,11 +12,20 @@ Fails (nonzero exit) if any of the PR's structural perf claims regress:
   the eager reference bitwise, and the dedup'd working set referencing
   strictly fewer unique ids than batch x fields on the ads_ctr preset.
 
+``--section mesh`` runs the scale-out gates instead (CI's simulated-mesh
+job): the CommPlan collective-bytes model must show the hierarchical
+compressed reduction beating ``flat_psum`` by >= pod_size x 2 on the
+dense allreduce, and — when 8 devices are visible — a live 2x4 sharded
+step must track the single-device loss.
+
   PYTHONPATH=src python -m benchmarks.perf_smoke
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src python -m benchmarks.perf_smoke --section mesh
 """
 
 from __future__ import annotations
 
+import argparse
 import dataclasses
 
 import numpy as np
@@ -28,7 +37,7 @@ from repro.fe.modelfeed import fe_env_to_model_batch_ref
 from repro.fe.ops import tokenize_hash, tokenize_hash_ref
 
 
-def main() -> None:
+def hotpath_checks() -> None:
     plan = featureplan.compile(get_spec("ads_ctr"))
     sched = plan.schedule
 
@@ -190,6 +199,90 @@ def main() -> None:
     np.testing.assert_array_equal(a.lengths, b.lengths)
     print(f"tokenize_hash: vectorized == ref on "
           f"{len(strings)} rows / {int(a.lengths.sum())} tokens")
+
+
+def mesh_checks() -> None:
+    """Scale-out gates: collective-bytes model + live sharded step."""
+    import jax
+
+    from repro.configs import get_arch
+    from repro.fe.modelfeed import dedup_capacity_hint
+    from repro.models import recsys as R
+    from repro.train.compression import CommPlan
+    from repro.train.optimizer import adamw
+
+    rows, pods, inner = 256, 2, 4
+    cfg = get_arch("dlrm-mlperf").smoke()
+    cfg = dataclasses.replace(cfg,
+                              dedup_capacity=dedup_capacity_hint(cfg, rows))
+    rows_dev = rows // (pods * inner)
+
+    def plan_for(codec):
+        return CommPlan.for_step(
+            n_pods=pods, inner=inner, compress=codec, hierarchical=True,
+            capacity=cfg.dedup_capacity, embed_dim=cfg.embed_dim,
+            n_dense_elems=R.dense_param_elems(cfg),
+            local_capacity=dedup_capacity_hint(cfg, rows_dev),
+            ids_per_device=R.batch_id_count(cfg, rows_dev))
+
+    flat_bytes = plan_for(None).interpod_bytes_per_step_flat
+    for codec in ("bf16", "int8"):
+        plan = plan_for(codec)
+        # the acceptance bar: inter-pod allreduce bytes cut by at least
+        # pod_size x 2 vs flat fp32 (1% slack for scatter-block padding)
+        assert plan.allreduce_reduction >= 2 * inner * 0.99, (
+            codec, plan.allreduce_reduction)
+        assert plan.interpod_bytes_per_step < flat_bytes
+        print(f"mesh bytes: codec={codec} allreduce "
+              f"x{plan.allreduce_reduction:.2f} less than flat "
+              f"(>= pod_size x 2 = {2 * inner}); whole step "
+              f"{plan.interpod_bytes_per_step} vs {flat_bytes} B inter-pod")
+
+    if len(jax.devices()) < pods * inner:
+        print(f"mesh live smoke SKIPPED: {len(jax.devices())} device(s) "
+              f"visible, need {pods * inner} (set XLA_FLAGS="
+              f"--xla_force_host_platform_device_count={pods * inner})")
+        return
+
+    from repro.launch.mesh import make_train_mesh
+
+    mesh = make_train_mesh(pods, inner)
+    opt = adamw(1e-3)
+    step_s, init_s, _ = R.make_sparse_train_step(cfg, opt)
+    step_m, init_m, _ = R.make_mesh_train_step(
+        cfg, opt, mesh=mesh, compress="bf16",
+        local_dedup_capacity=dedup_capacity_hint(cfg, rows_dev))
+    params = R.init_params(cfg, jax.random.PRNGKey(0))
+    ps, os_ = dict(params), init_s(params)
+    pm, om = R.shard_train_state(mesh, dict(params), init_m(params))
+    js, jm = jax.jit(step_s), jax.jit(step_m)
+    rng = np.random.default_rng(0)
+    for i in range(3):
+        batch = {
+            "dense": rng.normal(size=(rows, cfg.n_dense)).astype(np.float32),
+            "sparse": np.stack([rng.integers(0, v, rows)
+                                for v in cfg.vocab_sizes], 1).astype(np.int32),
+            "label": rng.integers(0, 2, rows).astype(np.float32),
+        }
+        ps, os_, ms = js(ps, os_, batch)
+        pm, om, mm = jm(pm, om, batch)
+        np.testing.assert_allclose(float(ms["loss"]), float(mm["loss"]),
+                                   rtol=1e-3)
+        assert int(ms["unique"]) == int(mm["unique"])
+    print(f"mesh live: 2x4 bf16 sharded step tracks single-device over 3 "
+          f"steps (loss {float(mm['loss']):.4f}, "
+          f"unique={int(mm['unique'])}/{int(mm['n_ids'])})")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--section", default="hotpath",
+                    choices=["hotpath", "mesh", "all"])
+    args = ap.parse_args()
+    if args.section in ("hotpath", "all"):
+        hotpath_checks()
+    if args.section in ("mesh", "all"):
+        mesh_checks()
     print("perf-smoke OK")
 
 

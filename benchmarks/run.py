@@ -146,7 +146,8 @@ def main() -> None:
 
     from benchmarks import bench_devicefeed, bench_end_to_end, \
         bench_feature_extraction, bench_hierarchy, bench_ingest, \
-        bench_launch_overhead, bench_pipeline, bench_trainfeed, roofline
+        bench_launch_overhead, bench_mesh, bench_pipeline, \
+        bench_trainfeed, roofline
 
     suites = [
         ("launch_overhead(TableI)", bench_launch_overhead.run),
@@ -157,6 +158,7 @@ def main() -> None:
         ("pipeline(hot path)", bench_pipeline.run),
         ("trainfeed(stage->train)", bench_trainfeed.run),
         ("hierarchy(PS tiers)", bench_hierarchy.run),
+        ("mesh(scale-out)", bench_mesh.run),
         ("roofline", roofline.run),
     ]
     if args.list:

@@ -132,13 +132,16 @@ def check_step(jitted, abstract_args: Tuple, *, expect_donation: bool,
     return findings
 
 
-def abstract_step_args(plan, mf) -> Tuple:
+def abstract_step_args(plan, mf, *, rows: int = 8,
+                       abstract_state=None) -> Tuple:
     """Abstract ``(params, opt_state, feed)`` for ``mf``'s fused step.
 
     Everything is derived without allocating: params via ``eval_shape``
     over the initializer, optimizer state via the train-step factory's
-    ``abstract_state``, and the feed from the staging layout's slot specs
-    (what :meth:`DeviceFeeder.claim_views` stages, post H2D).
+    ``abstract_state`` (pass ``abstract_state=`` for a non-default step
+    family, e.g. the mesh step's codec residual), and the feed from the
+    staging layout's slot specs (what :meth:`DeviceFeeder.claim_views`
+    stages, post H2D).
     """
     from repro.models import recsys as R
     from repro.train.optimizer import adamw
@@ -146,11 +149,11 @@ def abstract_step_args(plan, mf) -> Tuple:
     cfg = mf.config
     params = jax.eval_shape(lambda k: R.init_params(cfg, k),
                             jax.random.PRNGKey(0))
-    _, _, abstract_state = R.make_sparse_train_step(cfg, adamw(1e-3))
+    if abstract_state is None:
+        _, _, abstract_state = R.make_sparse_train_step(cfg, adamw(1e-3))
     opt_state = abstract_state(params)
 
     layout = plan.feed_layout(split_sparse_fields=mf.split)
-    rows = 8
     by_name = {s.name: s for s in layout.slots}
     feed = {}
     for slot in mf.slots:
@@ -184,6 +187,28 @@ def scan_preset(plan, mf, *, rows: int = 8) -> List[Finding]:
     findings += check_step(
         real.jitted, args, expect_donation=True,
         location=f"train-step {mf.config.name!r}")
+
+    # The mesh-sharded step must survive the same scan: shard_map can
+    # smuggle in effects (ordered collectives, debug callbacks) and its
+    # sharded outputs can silently break donation. Scan on the largest
+    # mesh the visible devices allow: (2, n/2) when simulated devices are
+    # forced (the CI mesh job), else the 1x1 degenerate mesh — the shape
+    # the bitwise-equivalence guarantee covers.
+    from repro.launch.mesh import make_train_mesh
+
+    n_dev = len(jax.devices())
+    shape = (2, n_dev // 2) if (n_dev > 1 and n_dev % 2 == 0) else (1, 1)
+    mesh = make_train_mesh(*shape)
+    mesh_rows = -(-rows // mesh.size) * mesh.size
+    raw_mesh, _, mesh_abstract = R.make_mesh_train_step(
+        mf.config, adamw(1e-3), mesh=mesh, compress="bf16")
+    margs = abstract_step_args(plan, mf, rows=mesh_rows,
+                               abstract_state=mesh_abstract)
+    msh = mf.make_step(raw_mesh, fused=True, donate=True)
+    findings += check_step(
+        msh.jitted, margs, expect_donation=True,
+        location=(f"train-step {mf.config.name!r}"
+                  f"[mesh {shape[0]}x{shape[1]}]"))
     return findings
 
 

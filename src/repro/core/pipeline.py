@@ -76,6 +76,9 @@ class PipelineStats:
     # When a HierarchyFeed pulled working sets (ps_feed stage), its
     # PsFeedStats + the PS TierStats are attached here after run().
     ps: Optional[Any] = None
+    # When the train step runs on a device mesh, its CommStats (static
+    # collective-byte plan x steps) are attached here after run().
+    comm: Optional[Any] = None
 
     @property
     def adapt_seconds(self) -> float:
@@ -153,6 +156,17 @@ def _capture_train_feed(stats: PipelineStats, train_step: Any) -> None:
     fs = getattr(train_step, "feed_stats", None)
     if fs is not None and hasattr(fs, "adapt_seconds"):
         stats.train_feed = fs
+
+
+def _capture_comm(stats: PipelineStats, train_step: Any) -> None:
+    """Adopt mesh collective stats from the train step's ``comm_stats``.
+
+    Duck-typed off :class:`repro.train.compression.CommStats` so core stays
+    import-independent of :mod:`repro.train`.
+    """
+    cs = getattr(train_step, "comm_stats", None)
+    if cs is not None and hasattr(cs, "interpod_bytes_total"):
+        stats.comm = cs
 
 
 # Thread contract (verified by `python -m repro.check` / repro.check.lockset):
@@ -419,6 +433,7 @@ class PipelinedRunner:
             self.stats.wall_seconds = time.perf_counter() - t_start
             _capture_ingest(self.stats, batches)
             _capture_train_feed(self.stats, self.train_step)
+            _capture_comm(self.stats, self.train_step)
         return state
 
 
@@ -502,6 +517,7 @@ class StagedRunner:
             self.stats.batches += 1
         self.stats.wall_seconds = time.perf_counter() - t_start
         _capture_train_feed(self.stats, self.train_step)
+        _capture_comm(self.stats, self.train_step)
         return state
 
 

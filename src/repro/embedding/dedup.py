@@ -140,6 +140,41 @@ def dedup_hierarchical(
     return unique, final_inv.astype(jnp.int32), count
 
 
+def dedup_two_stage_local(
+    local_ids: jax.Array, *, capacity: int, local_capacity: int,
+    gather_axes,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Two-stage dedup *from inside* shard_map (the mesh train step's form).
+
+    :func:`dedup_hierarchical` wraps shard_map around an unsharded caller;
+    the mesh train step is already device-local when it needs the working
+    set, so this is the per-device body: local unique (stage 1, bounds the
+    pooled sort to ``n_devices x local_capacity`` ids) -> all-gather of the
+    FILL-padded local uniques over ``gather_axes`` -> global unique of the
+    pool (replicated compute, stage 2). The local inverse is recovered by
+    ``searchsorted`` against the sorted global unique array — identical to
+    ``jnp.unique``'s inverse (position in the sorted uniques), so on a 1x1
+    mesh the result is bitwise :func:`dedup`.
+
+    Returns ``(unique, inverse, count, local_count)`` — ``unique``/``count``
+    replicated, ``inverse`` for this device's ``local_ids``, ``local_count``
+    this device's stage-1 unique count (the pooled-exchange size the comm
+    stats report). ``local_capacity`` must bound this shard's true unique
+    count or overflow drops the largest local ids (callers size it with
+    :func:`repro.fe.modelfeed.dedup_capacity_hint` on the per-device rows).
+    """
+    flat = local_ids.reshape(-1).astype(jnp.int32)
+    local_u = jnp.unique(flat, size=local_capacity, fill_value=FILL)
+    pool = jax.lax.all_gather(local_u, gather_axes, axis=0, tiled=True)
+    unique = jnp.unique(pool, size=capacity, fill_value=FILL)
+    # every local id is present in `unique` (sorted), so searchsorted is
+    # exactly jnp.unique's inverse for this device's slice of the batch
+    inverse = jnp.searchsorted(unique, flat).astype(jnp.int32)
+    count = jnp.sum(unique != FILL).astype(jnp.int32)
+    local_count = jnp.sum(local_u != FILL).astype(jnp.int32)
+    return unique, inverse.reshape(local_ids.shape), count, local_count
+
+
 def scatter_unique_grads(
     grad_rows: jax.Array, inverse: jax.Array, capacity: int
 ) -> jax.Array:

@@ -91,6 +91,33 @@ class MultiTable:
                             capacity=capacity)
 
 
+# ------------------------------------------------------------- row sharding
+def row_sharding(mesh, *, axes: Tuple[str, ...] = ("pod", "data")):
+    """NamedSharding that splits a packed table's rows over ``axes``.
+
+    The packed (V_total, D) array shards on dim 0 across the flattened
+    mesh axes, dim replicated — the trivial rule the packing buys us.
+    Padded row counts (``RecsysConfig.row_align``) keep the split even.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as _P
+
+    return NamedSharding(mesh, _P(axes, None))
+
+
+def shard_bounds(total_rows: int, n_shards: int, shard_index: int
+                 ) -> Tuple[int, int]:
+    """[lo, hi) global row range owned by shard ``shard_index`` under the
+    even row split of :func:`row_sharding`. ``total_rows`` must divide by
+    ``n_shards`` (guaranteed when it is the row_align-padded count and the
+    alignment covers the mesh size)."""
+    if total_rows % n_shards:
+        raise ValueError(
+            f"{total_rows} rows do not shard evenly over {n_shards} devices "
+            f"(raise RecsysConfig.row_align)")
+    rows = total_rows // n_shards
+    return shard_index * rows, (shard_index + 1) * rows
+
+
 # ------------------------------------------------------------------ lookups
 def lookup(params: jax.Array, ids: jax.Array) -> jax.Array:
     """Plain embedding lookup: (..., ) ids -> (..., D) rows (sharded gather)."""

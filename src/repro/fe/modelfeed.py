@@ -149,6 +149,9 @@ class TrainFeedStats:
     unique_ids: int = 0         # sum over steps of the dedup'd working-set count
     total_ids: int = 0          # sum over steps of ids referenced (batch x fields)
     overflows: int = 0          # steps whose unique count saturated the capacity
+    # mesh two-stage dedup only: sum over steps of stage-1 (per-device)
+    # unique counts — the pooled-exchange volume before the global unique
+    local_unique_ids: int = 0
 
     @property
     def adapt_dispatches_per_step(self) -> float:
@@ -160,6 +163,13 @@ class TrainFeedStats:
         adaptation ops plus the single train-jit call. 1.0 means the whole
         boundary is one fused dispatch."""
         return (self.adapt_dispatches + self.steps) / max(self.steps, 1)
+
+    @property
+    def pool_ratio(self) -> float:
+        """stage-1 unique ids / referenced ids — how much the local dedup
+        shrinks the cross-device id pool before the global unique (0 when
+        the step reports no stage-1 counts, i.e. single-device)."""
+        return self.local_unique_ids / max(self.total_ids, 1)
 
     @property
     def unique_ratio(self) -> float:
@@ -409,6 +419,9 @@ class ModelFeed:
         n = metrics.get("n_ids")
         if n is not None:
             self.stats.total_ids += int(n)
+        lu = metrics.get("local_unique")
+        if lu is not None:
+            self.stats.local_unique_ids += int(lu)
         if self.dedup_capacity and u >= self.dedup_capacity:
             if self.stats.overflows == 0:
                 warnings.warn(

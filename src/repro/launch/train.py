@@ -137,6 +137,18 @@ def run_streaming(args, spec, cfg, state, opt, check_report=None) -> None:
     mf = plan.model_feed(cfg, split_sparse_fields=split,
                          rows_hint=loader.rows_hint)
     cfg = mf.config
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_train_mesh, parse_mesh_spec
+        n_pods, n_data = parse_mesh_spec(args.mesh)
+        n_mesh_dev = n_pods * n_data
+        if n_mesh_dev > 1 and args.device_feed != "off":
+            raise SystemExit(
+                "--mesh with more than one device requires --device-feed "
+                "off: the staging arena is single-device; the mesh jit "
+                "splits the host batch across the row shards itself")
+        mesh = make_train_mesh(n_pods, n_data)
+    comm = None
     if args.embedding == "hierarchy":
         # Embedding rows come from the hierarchical PS (SSD <- host cache
         # <- per-batch working set), pulled a batch ahead on a dedicated
@@ -148,6 +160,41 @@ def run_streaming(args, spec, cfg, state, opt, check_report=None) -> None:
                 "shards (repro.fe.datagen writes the manifest)")
         raw_step, _, _ = R.make_hierarchy_train_step(cfg, opt)
         extra_slots = WS_SLOTS
+    elif mesh is not None:
+        # Data-parallel scale-out: table rows + Adagrad accumulators
+        # sharded over the ('pod', 'data') mesh, two-stage dedup, and
+        # hierarchical (compressed across pods) gradient reduction. On a
+        # 1x1 mesh with --compress off this path is bitwise-identical to
+        # the single-device step (tests/test_mesh.py).
+        from repro.fe.modelfeed import dedup_capacity_hint
+        from repro.train.compression import CommPlan, CommStats
+        local_cap = 0
+        if n_mesh_dev > 1 and loader.rows_hint:
+            # stage-1 capacity: sized like the global working set, but for
+            # one device's share of the batch rows
+            local_cap = dedup_capacity_hint(
+                cfg, max(1, loader.rows_hint // n_mesh_dev))
+        raw_step, mesh_init, _ = R.make_mesh_train_step(
+            cfg, opt, mesh=mesh, compress=args.compress,
+            local_dedup_capacity=local_cap)
+        # Rebuild + place the train state per the sharding contract: the
+        # generic init in _run lacks the codec's error-feedback residual
+        # and the NamedSharding placements.
+        state["opt"] = mesh_init(state["params"])
+        state["params"], state["opt"] = R.shard_train_state(
+            mesh, state["params"], state["opt"])
+        rows_dev = max(1, (loader.rows_hint or args.batch) // n_mesh_dev)
+        ids_dev = R.batch_id_count(cfg, rows_dev)
+        comm = CommStats(plan=CommPlan.for_step(
+            n_pods=n_pods, inner=n_data, compress=args.compress,
+            hierarchical=True,
+            capacity=cfg.dedup_capacity or ids_dev * n_mesh_dev,
+            embed_dim=cfg.embed_dim,
+            n_dense_elems=R.dense_param_elems(cfg),
+            local_capacity=local_cap or ids_dev,
+            ids_per_device=ids_dev))
+        print(f"comm plan: {comm.summary()}")
+        extra_slots = ()
     else:
         raw_step, _, _ = R.make_sparse_train_step(cfg, opt)
         extra_slots = ()
@@ -206,6 +253,8 @@ def run_streaming(args, spec, cfg, state, opt, check_report=None) -> None:
 
     losses = []
     cost_args = []  # (params, opt, feed) ShapeDtypeStructs for --metrics
+    from repro.obs.trace import get_tracer
+    tracer = get_tracer()
 
     def step_fn(state, env):
         if args.metrics and not cost_args:
@@ -219,18 +268,37 @@ def run_streaming(args, spec, cfg, state, opt, check_report=None) -> None:
                 feed.update(extras)
             p, o = abstractify((state["params"], state["opt"]))
             cost_args.append((p, o, feed))
+        w0 = tracer.now_ns() if (tracer.enabled and comm is not None) else 0
         p, o, m = fused(state["params"], state["opt"], env)
         if hier is not None:
             # Async write-back: hand the updated working set to the PS
             # writer thread; the pull for batch i+2 waits on it, not us.
             hier.complete(env[WS_META], m.pop("ws_rows"), m.pop("ws_accum"))
-        losses.append(float(m["loss"]))
+        losses.append(float(m["loss"]))  # blocks until the step lands
+        if comm is not None:
+            comm.on_step()
+            if tracer.enabled:
+                # The collectives execute inside the fused XLA step, so
+                # their spans cover the step window on dedicated virtual
+                # tracks, annotated with the plan's modeled inter-pod
+                # bytes (exchange = working set + dedup pool).
+                w1 = tracer.now_ns()
+                cp = comm.plan
+                tracer.complete_on(
+                    "comm.exchange", "comm.exchange", w0, w1,
+                    interpod_bytes=(cp.exchange_interpod_bytes
+                                    + cp.dedup_interpod_bytes))
+                tracer.complete_on(
+                    "comm.allreduce", "comm.allreduce", w0, w1,
+                    interpod_bytes=cp.allreduce_interpod_bytes,
+                    codec=cp.codec or "off")
         state = {"params": p, "opt": o}
         if ckpt is not None and len(losses) % args.checkpoint_every == 0:
             ckpt.save_async(len(losses) - 1, state)
         return state
 
     step_fn.feed_stats = mf.stats  # runners adopt the train-feed tier
+    step_fn.comm_stats = comm      # runners adopt the comm tier (mesh only)
 
     runner = PipelinedRunner(layers, step_fn,
                              prefetch=args.stream_prefetch,
@@ -273,6 +341,8 @@ def run_streaming(args, spec, cfg, state, opt, check_report=None) -> None:
               f"(capacity={cfg.dedup_capacity})")
     if hier is not None:
         print(f"ps: {hier.summary()} ps_stage={s.ps_seconds:.2f}s")
+    if comm is not None:
+        print(f"comm: {comm.summary()}")
     if args.metrics:
         from repro.launch.hlo_stats import step_cost
         from repro.obs import MetricsRegistry
@@ -322,6 +392,21 @@ def main() -> None:
                          "into the arena (zero-copy feed, no env->arena "
                          "memcpy) as per-field id vectors for the dedup'd "
                          "embedding feed")
+    ap.add_argument("--mesh", default=None, metavar="PODSxDATA",
+                    help="run the streaming train loop data-parallel on a "
+                         "('pod', 'data') device mesh, e.g. 2x4: embedding "
+                         "rows + Adagrad accumulators sharded over all "
+                         "devices, two-stage (local->global) id dedup, "
+                         "hierarchical cross-pod gradient reduction; "
+                         "simulate devices with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N "
+                         "(streaming --data-dir mode, recsys only)")
+    ap.add_argument("--compress", default="off",
+                    choices=["bf16", "int8", "off"],
+                    help="codec for the inter-pod gradient wire of --mesh "
+                         "(error feedback carried in the optimizer state, "
+                         "accumulation stays fp32); 'off' keeps the 1x1 "
+                         "path bitwise-identical to single-device")
     ap.add_argument("--embedding", default="table",
                     choices=["table", "hierarchy"],
                     help="embedding backend: 'table' keeps the full table "
@@ -433,6 +518,19 @@ def _run(args) -> None:
                 "--embedding hierarchy is incompatible with --device-feed "
                 "arena (the zero-copy arena assembles per-field id vectors "
                 "for the in-memory dedup'd lookup); use on/off")
+    if args.mesh:
+        if spec.family != "recsys":
+            raise SystemExit(
+                "--mesh data-parallel training shards the embedding table "
+                f"and is wired for recsys archs (got family={spec.family!r})")
+        if not args.data_dir:
+            raise SystemExit(
+                "--mesh runs the streaming pipeline: pass --data-dir")
+        if args.embedding == "hierarchy":
+            raise SystemExit(
+                "--mesh is incompatible with --embedding hierarchy (the PS "
+                "pull path assumes a single device holds the working set); "
+                "pick one scale-out axis")
     key = jax.random.PRNGKey(0)
     opt = adamw(args.lr)
     check_report = _preflight(args, spec) if args.check else None

@@ -463,6 +463,280 @@ def make_sparse_train_step(c: RecsysConfig, dense_optimizer, *,
     return train_step, init, abstract_state
 
 
+def dense_param_elems(c: RecsysConfig) -> int:
+    """Total element count of the dense (non-embedding) parameter tree —
+    the gradient volume the mesh step's cross-pod all-reduce carries."""
+    return int(sum(np.prod(s) for k, s in param_shapes(c).items()
+                   if k != "embed"))
+
+
+def batch_id_count(c: RecsysConfig, rows: int) -> int:
+    """Flat id count :func:`collect_gids` yields for ``rows`` examples
+    (the comm plan's per-device raw-id volume)."""
+    if c.kind == "bst":
+        return rows * (c.seq_len + 1) + rows * (c.n_sparse - 1)
+    return rows * c.n_sparse
+
+
+def make_mesh_train_step(c: RecsysConfig, dense_optimizer, *,
+                         mesh, embed_lr: float = 0.01,
+                         embed_eps: float = 1e-10,
+                         local_dedup_capacity: int = 0,
+                         compress: Any = None, hierarchical: bool = True,
+                         pod_axis: str = "pod", data_axis: str = "data"):
+    """Data-parallel working-set train step on a ('pod', 'data') mesh.
+
+    The scale-out form of :func:`make_sparse_train_step` — same arithmetic,
+    distributed per the FeatureBox authors' recipe (arXiv 2201.05500 +
+    2003.05622): the packed table and its Adagrad accumulators are
+    **row-sharded** over the flattened mesh (``P(('pod','data'), None)``),
+    the batch is row-split the same way, and each device runs this body
+    under ``shard_map``:
+
+    1. **two-stage dedup** — local ``jnp.unique`` bounds the pooled sort to
+       ``n_devices x local_capacity`` ids, then a global unique of the
+       all-gathered pool (:func:`repro.embedding.dedup.dedup_two_stage_local`);
+    2. **working-set exchange** — each device contributes the unique rows +
+       accumulators it owns (out-of-shard slots zeroed), one fp32
+       hierarchical reduction replicates the working set everywhere;
+    3. forward/backward on the local batch rows against the replicated
+       working set (identical ``local_loss`` to the single-device step);
+    4. **gradient reduction** — working-set grads and the flattened dense
+       grads each go through :func:`repro.train.compression.hierarchical_psum`
+       (reduce-scatter in-pod, *compressed* wire + fp32 accumulation
+       across pods, all-gather in-pod) or :func:`flat_psum` when
+       ``hierarchical=False``. The dense reduction carries the codec's
+       error-feedback residual in ``opt_state["comm_residual"]``
+       (``f32[n_pods, padded_dense_elems]``, sharded so each device owns
+       exactly its reduce-scattered shard's residual). Working-set grads
+       are compressed statelessly: their slots map to *different* rows
+       every step, so a carried residual would mix rows.
+    5. replicated Adagrad on the working set, each device scattering back
+       only the rows it owns (``mode="drop"``); dense update replicated.
+
+    On a **1x1 mesh with compression off** every collective is an
+    identity and every pad/slice is a no-op, so losses, params, and
+    optimizer state are bitwise-identical to
+    :func:`make_sparse_train_step` (asserted in ``tests/test_mesh.py``).
+    ``metrics["local_unique"]`` adds the summed stage-1 unique counts (the
+    pooled-exchange volume the ``comm`` tier reports).
+    """
+    from repro.embedding.dedup import FILL, dedup_two_stage_local
+    from repro.train.compression import (
+        codec_name, flat_psum, hierarchical_psum)
+
+    axes = (pod_axis, data_axis)
+    n_pods = int(mesh.shape[pod_axis])
+    inner = int(mesh.shape[data_axis])
+    n_dev = n_pods * inner
+    codec = codec_name(compress)
+    if c.padded_rows % n_dev:
+        raise ValueError(
+            f"padded table rows {c.padded_rows} do not shard evenly over "
+            f"{n_dev} devices — raise RecsysConfig.row_align")
+
+    n_dense = dense_param_elems(c)
+    npad_dense = -(-n_dense // inner) * inner  # reduce-scatter granularity
+
+    def _pad_to_inner(v):
+        n = int(v.shape[0])
+        npad = -(-n // inner) * inner
+        if npad == n:
+            return v
+        return jnp.concatenate([v, jnp.zeros((npad - n,), v.dtype)])
+
+    def _reduce(vec, *, codec=None, residual=None):
+        """All-reduce a 1-D fp32 vector over the whole mesh."""
+        if hierarchical:
+            return hierarchical_psum(vec, pod_axis=pod_axis,
+                                     inner_axis=data_axis,
+                                     compress=codec, residual=residual)
+        return flat_psum(vec, pod_axis=pod_axis, inner_axis=data_axis), residual
+
+    def init(params):
+        dense_params = {k: v for k, v in params.items() if k != "embed"}
+        st = {
+            "dense": dense_optimizer.init(dense_params),
+            "embed_accum": jnp.full((params["embed"].shape[0],), 0.1,
+                                    jnp.float32),
+        }
+        if codec is not None:
+            st["comm_residual"] = jnp.zeros((n_pods, npad_dense), jnp.float32)
+        return st
+
+    def abstract_state(params):
+        dense_params = {k: v for k, v in params.items() if k != "embed"}
+        st = {
+            "dense": dense_optimizer.abstract_state(dense_params),
+            "embed_accum": jax.ShapeDtypeStruct((params["embed"].shape[0],),
+                                                jnp.float32),
+        }
+        if codec is not None:
+            st["comm_residual"] = jax.ShapeDtypeStruct(
+                (n_pods, npad_dense), jnp.float32)
+        return st
+
+    def _device_step(params, opt_state, batch):
+        embed_shard = params["embed"]                   # (rows/n_dev, D)
+        accum_shard = opt_state["embed_accum"]          # (rows/n_dev,)
+        shard_rows = int(embed_shard.shape[0])
+        dense_params = {k: v for k, v in params.items() if k != "embed"}
+        dev = (jax.lax.axis_index(pod_axis) * inner
+               + jax.lax.axis_index(data_axis))
+        lo = dev * shard_rows                           # first owned row
+
+        gids = collect_gids(c, batch)                   # local batch shard
+        sites = sorted(gids.keys())
+        flat_local = jnp.concatenate([gids[s].reshape(-1) for s in sites])
+        n_local = int(flat_local.shape[0])
+        cap = c.dedup_capacity or n_local * n_dev
+        local_cap = local_dedup_capacity or min(cap, n_local)
+        if n_dev == 1:
+            # stage 1 must never overflow when it IS the whole dedup
+            local_cap = min(cap, n_local)
+
+        unique, inverse, n_unique, local_count = dedup_two_stage_local(
+            flat_local, capacity=cap, local_capacity=local_cap,
+            gather_axes=axes)
+
+        # -------- working-set exchange: each device contributes owned rows
+        local_idx = unique - lo                         # FILL -> huge
+        owned = (local_idx >= 0) & (local_idx < shard_rows)
+        idx = jnp.clip(local_idx, 0, shard_rows - 1)
+        contrib = jnp.where(owned[:, None],
+                            jnp.take(embed_shard, idx, axis=0), 0.0)
+        acc_contrib = jnp.where(owned, jnp.take(accum_shard, idx), 0.0)
+        packed = jnp.concatenate([
+            contrib.astype(jnp.float32).reshape(-1), acc_contrib])
+        red, _ = _reduce(_pad_to_inner(packed))         # fp32, never quantized
+        working = red[:cap * c.embed_dim].reshape(cap, c.embed_dim)
+        accum_rows0 = red[cap * c.embed_dim: cap * c.embed_dim + cap]
+
+        inv_by_site = {}
+        off = 0
+        for s in sites:
+            n = int(np.prod(gids[s].shape))
+            inv_by_site[s] = inverse.reshape(-1)[off: off + n].reshape(
+                gids[s].shape)
+            off += n
+
+        def local_loss(dense_p, working_rows):
+            rows = {f"_rows_{s}": jnp.take(working_rows, inv_by_site[s],
+                                           axis=0)
+                    for s in sites}
+            b2 = dict(batch)
+            b2.update(rows)
+            logits = forward(dict(dense_p), c, b2)
+            return sigmoid_bce(logits, batch["label"]).mean()
+
+        loss, (gd, gw) = jax.value_and_grad(local_loss, argnums=(0, 1))(
+            dense_params, working.astype(c.dtype))
+
+        # -------- gradient reduction (the compressed inter-pod wire)
+        gw = gw.astype(jnp.float32)
+        valid = (unique != FILL).astype(jnp.float32)[:, None]
+        gw = gw * valid
+        # stateless codec: working-set slots alias different rows each step
+        gw_red, _ = _reduce(_pad_to_inner(gw.reshape(-1)), codec=codec)
+        gw = gw_red[:cap * c.embed_dim].reshape(cap, c.embed_dim)
+
+        gd_leaves, gd_def = jax.tree.flatten(gd)
+        gd_flat = jnp.concatenate(
+            [l.reshape(-1).astype(jnp.float32) for l in gd_leaves])
+        residual = (opt_state["comm_residual"][0]
+                    if codec is not None else None)
+        gd_red, new_residual = _reduce(_pad_to_inner(gd_flat), codec=codec,
+                                       residual=residual)
+        if n_dev > 1:
+            inv_ndev = np.float32(1.0 / n_dev)
+            loss = jax.lax.psum(loss, axes) * inv_ndev
+            gw = gw * inv_ndev
+            gd_red = gd_red * inv_ndev
+            local_count = jax.lax.psum(local_count, axes)
+        parts, off = [], 0
+        for leaf in gd_leaves:
+            n = int(np.prod(leaf.shape))
+            parts.append(gd_red[off: off + n].reshape(leaf.shape)
+                         .astype(leaf.dtype))
+            off += n
+        gd = jax.tree.unflatten(gd_def, parts)
+
+        # -------- replicated updates, sharded write-back
+        new_dense, new_dense_state = dense_optimizer.update(
+            dense_params, gd, opt_state["dense"])
+
+        gsq = jnp.sum(gw * gw, axis=-1)
+        accum_rows = accum_rows0 + gsq
+        scale = embed_lr / (jnp.sqrt(accum_rows) + embed_eps)
+        new_rows = working - scale[:, None] * gw
+        # scatter only the rows this shard owns; everything else (other
+        # shards' rows AND FILL pad slots) routes out of bounds -> dropped
+        target = jnp.where(owned, local_idx, shard_rows)
+        embed_shard = embed_shard.at[target].set(
+            new_rows.astype(embed_shard.dtype), mode="drop")
+        accum_shard = accum_shard.at[target].set(accum_rows, mode="drop")
+
+        new_params = dict(new_dense)
+        new_params["embed"] = embed_shard
+        new_opt = {"dense": new_dense_state, "embed_accum": accum_shard}
+        if codec is not None:
+            new_opt["comm_residual"] = new_residual[None]
+        metrics = {"loss": loss, "unique": n_unique,
+                   "n_ids": jnp.int32(n_local * n_dev),
+                   "local_unique": local_count}
+        return new_params, new_opt, metrics
+
+    def train_step(params, opt_state, batch):
+        rows = int(batch["label"].shape[0])
+        if rows % n_dev:
+            raise ValueError(
+                f"batch of {rows} rows does not split over {n_dev} mesh "
+                f"devices — pick a batch size divisible by the mesh")
+        pspec = {k: (P(axes, None) if k == "embed" else P())
+                 for k in params}
+        ospec = {
+            "dense": jax.tree.map(lambda _: P(), opt_state["dense"]),
+            "embed_accum": P(axes),
+        }
+        if codec is not None:
+            ospec["comm_residual"] = P(pod_axis, data_axis)
+        bspec = {k: P(axes) for k in batch}
+        mspec = {"loss": P(), "unique": P(), "n_ids": P(),
+                 "local_unique": P()}
+        fn = jax.shard_map(_device_step, mesh=mesh,
+                           in_specs=(pspec, ospec, bspec),
+                           out_specs=(pspec, ospec, mspec),
+                           check_vma=False)
+        return fn(params, opt_state, batch)
+
+    return train_step, init, abstract_state
+
+
+def shard_train_state(mesh, params: Params, opt_state: Dict[str, Any], *,
+                      pod_axis: str = "pod", data_axis: str = "data"):
+    """Place (params, opt_state) per the mesh step's sharding contract:
+    embedding rows + Adagrad accumulators split over the flattened mesh,
+    the dense tree replicated, the codec residual (when present) split so
+    each device owns its reduce-scattered shard."""
+    from jax.sharding import NamedSharding
+
+    axes = (pod_axis, data_axis)
+
+    def put(x, spec):
+        return jax.device_put(x, NamedSharding(mesh, spec))
+
+    new_params = {k: put(v, P(axes, None) if k == "embed" else P())
+                  for k, v in params.items()}
+    new_opt: Dict[str, Any] = {
+        "dense": jax.tree.map(lambda v: put(v, P()), opt_state["dense"]),
+        "embed_accum": put(opt_state["embed_accum"], P(axes)),
+    }
+    if "comm_residual" in opt_state:
+        new_opt["comm_residual"] = put(opt_state["comm_residual"],
+                                       P(pod_axis, data_axis))
+    return new_params, new_opt
+
+
 def gid_site_shapes(c: RecsysConfig, batch: Dict[str, Any]) -> Dict[str, Tuple[int, ...]]:
     """Shapes of :func:`collect_gids`'s per-site id arrays, without tracing
     the id arithmetic. Shared by the hierarchy train step (which splits a

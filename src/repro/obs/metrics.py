@@ -128,7 +128,7 @@ class MetricsRegistry:
         exec_stats = getattr(stats, "exec_stats", None)
         if exec_stats is not None:
             reg.register("exec", exec_stats)
-        for tier in ("ingest", "feed", "train_feed", "ps"):
+        for tier in ("ingest", "feed", "train_feed", "ps", "comm"):
             obj = getattr(stats, tier, None)
             if obj is not None:
                 reg.register(tier, obj)
@@ -182,6 +182,13 @@ def pipeline_rollup(stats: Any) -> Dict[str, Number]:
         "ps_host_hit_rate": float(getattr(ps, "host_hit_rate", 0.0)) if ps else 0.0,
         "ps_evictions": int(getattr(ps, "evictions", 0)) if ps else 0,
     }
+    # mesh collectives tier (0 when single-device)
+    comm = getattr(stats, "comm", None)
+    out["comm_interpod_bytes_total"] = \
+        int(getattr(comm, "interpod_bytes_total", 0)) if comm else 0
+    plan = getattr(comm, "plan", None)
+    out["comm_interpod_reduction"] = \
+        float(getattr(plan, "interpod_reduction", 1.0)) if plan else 1.0
     if wall > 0:
         for stage in ("disk", "fe", "h2d", "train"):
             out[f"{stage}_busy_fraction"] = \

@@ -112,7 +112,8 @@ class Tracer:
         self.enabled = enabled
         self._lock = threading.Lock()
         self._events: List[Tuple[str, int, int, str, Optional[Dict]]] = []
-        self._tracks: Dict[int, Tuple[int, str]] = {}  # ident -> (tid, name)
+        # thread ident (int) or "virtual:<name>" (str) -> (tid, track name)
+        self._tracks: Dict[Any, Tuple[int, str]] = {}
         self._epoch_ns = time.perf_counter_ns()
 
     # ------------------------------------------------------------ recording
@@ -153,6 +154,33 @@ class Tracer:
         a = args or None
         with self._lock:
             tid = self._track_locked()
+            self._events.append((_B, tid, t0_ns, name, a))
+            self._events.append((_E, tid, t1_ns, name, None))
+
+    def complete_on(self, track: str, name: str, t0_ns: int, t1_ns: int,
+                    **args: Any) -> None:
+        """Record a retroactive span on a named *virtual* track.
+
+        :meth:`complete` reuses the calling thread's track, which is only
+        monotonicity-safe when that thread recorded nothing inside the
+        window. Work that happens *inside* another span — e.g. the
+        collective phases of a fused train step, which execute within the
+        step's own ``train.step`` span — would interleave non-monotone
+        B/E pairs on the thread track. A virtual track (one per ``track``
+        name, lazily allocated, keyed separately from thread idents)
+        gives each such series its own monotone timeline in the exported
+        timeline — the ``comm.*`` spans of the mesh train loop live here.
+        """
+        if not self.enabled:
+            return
+        a = args or None
+        with self._lock:
+            key = f"virtual:{track}"
+            entry = self._tracks.get(key)
+            if entry is None:
+                entry = (len(self._tracks), track)
+                self._tracks[key] = entry
+            tid = entry[0]
             self._events.append((_B, tid, t0_ns, name, a))
             self._events.append((_E, tid, t1_ns, name, None))
 

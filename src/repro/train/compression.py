@@ -8,17 +8,52 @@ vs in-pod ICI), so cross-pod gradient all-reduce benefits from compression:
   but applied next step [Seide et al. 2014; 1-bit SGD lineage].
 * ``int8_compress`` — per-tensor scale + int8 (4x), also with error feedback.
 * ``hierarchical_psum`` — shard_map helper: reduce-scatter inside the pod,
-  compressed all-reduce across pods, all-gather inside the pod. Inter-pod
-  bytes drop by (pod_size x compression) vs a flat all-reduce.
+  compressed all-gather + **fp32 local accumulation** across pods,
+  all-gather inside the pod. Inter-pod bytes drop by
+  (pod_size x compression) vs a flat all-reduce, quantization error is
+  carried per device in a residual the caller threads through its
+  optimizer state, and the sum itself is never computed in reduced
+  precision — only the wire is.
+* :class:`CommPlan` / :class:`CommStats` — the deterministic byte model of
+  one mesh train step (exchange / dedup pool / grad all-reduce), the
+  source of the ``comm.*`` metrics tier and the gated
+  ``bench_mesh`` collective-bytes rows.
+
+Byte model (per device, per step). A flat all-reduce of ``n`` fp32
+elements moves every element across the inter-pod boundary twice
+(reduce + broadcast): ``2 * n * 4`` bytes. The hierarchical scheme
+reduce-scatters inside the pod first, so only ``n / pod_size`` elements
+per device cross pods, at the codec's wire width: ``2 * (n / pod_size) *
+itemsize``. The ratio is ``pod_size * 4 / itemsize`` — pod_size x 2 for
+bf16, pod_size x 4 for int8 — which is exactly the gated acceptance row.
 """
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+#: codec name -> wire bytes per element
+WIRE_ITEMSIZE = {None: 4, "bf16": 2, "int8": 1}
+
+
+def codec_name(compress: Any) -> Optional[str]:
+    """Normalize a ``compress`` argument (bool | str | None) to a codec name.
+
+    ``True`` keeps the historical meaning (bf16 wire); ``False``/``None``/
+    ``"off"``/``"none"`` disable compression.
+    """
+    if compress in (None, False, "off", "none"):
+        return None
+    if compress is True:
+        return "bf16"
+    if compress in ("bf16", "int8"):
+        return compress
+    raise ValueError(f"unknown codec {compress!r} (bf16|int8|off)")
 
 
 # ------------------------------------------------------- codecs (+feedback)
@@ -67,22 +102,232 @@ def compressed_bytes(tree: Any) -> int:
 # ------------------------------------------------ hierarchical cross-pod sum
 def hierarchical_psum(x: jax.Array, *, pod_axis: str = "pod",
                       inner_axis: str = "data",
-                      compress: bool = True) -> jax.Array:
+                      compress: Any = True,
+                      residual: Optional[jax.Array] = None
+                      ) -> Tuple[jax.Array, Optional[jax.Array]]:
     """Two-level all-reduce for use INSIDE shard_map.
 
-    reduce_scatter(inner) -> [compress] psum(pod) [decompress] -> all_gather(inner).
-    Inter-pod traffic: N/inner_size elements (xN less) in bf16 (x2 less).
+    reduce_scatter(inner) -> [encode] all_gather(pod) of the compressed
+    shards, decoded and **summed locally in fp32** -> all_gather(inner).
+    Inter-pod traffic: N/inner_size elements (xN less) at the codec's wire
+    width (x2 bf16, x4 int8).
+
+    ``compress`` selects the codec (``"bf16"`` | ``"int8"`` | off; ``True``
+    means bf16 for backwards compatibility). ``residual`` is this device's
+    error-feedback carry from the previous step — shaped like the
+    reduce-scattered shard (``x.shape[0] / inner_size`` on dim 0) — added
+    to the shard before quantization, so the wire error is not lost but
+    applied next step (same scheme as the tree codecs above). The caller
+    owns its persistence: thread the returned residual through optimizer
+    state. With no codec, the residual passes through untouched.
+
+    Returns ``(reduced, new_residual)``. With ``compress`` off and a
+    1x1 mesh every collective is an identity, so the result is bitwise
+    ``x`` — the single-device equivalence guarantee the mesh train step
+    builds on.
     """
+    codec = codec_name(compress)
     shard = jax.lax.psum_scatter(x, inner_axis, scatter_dimension=0, tiled=True)
-    if compress:
-        wire = shard.astype(jnp.bfloat16)
-        reduced = jax.lax.psum(wire, pod_axis).astype(shard.dtype)
-    else:
+    if codec is None:
         reduced = jax.lax.psum(shard, pod_axis)
-    return jax.lax.all_gather(reduced, inner_axis, axis=0, tiled=True)
+        new_residual = residual
+    else:
+        adjusted = shard.astype(jnp.float32)
+        if residual is not None:
+            adjusted = adjusted + residual
+        if codec == "bf16":
+            wire = adjusted.astype(jnp.bfloat16)
+            # all-gather the *compressed* shards (that is the inter-pod
+            # wire), then decode and accumulate locally in fp32: the sum
+            # is never computed in reduced precision.
+            got = jax.lax.all_gather(wire, pod_axis, axis=0)   # (P, n/K) bf16
+            reduced = jnp.sum(got.astype(jnp.float32), axis=0)
+            decoded = wire.astype(jnp.float32)
+        else:  # int8: per-call scale rides along (4 bytes vs n/K payload)
+            scale = jnp.maximum(jnp.max(jnp.abs(adjusted)), 1e-30) / 127.0
+            q = jnp.clip(jnp.round(adjusted / scale), -127, 127).astype(jnp.int8)
+            got = jax.lax.all_gather(q, pod_axis, axis=0)      # (P, n/K) int8
+            scales = jax.lax.all_gather(scale, pod_axis, axis=0)  # (P,)
+            reduced = jnp.sum(
+                got.astype(jnp.float32)
+                * scales.reshape((-1,) + (1,) * q.ndim), axis=0)
+            decoded = q.astype(jnp.float32) * scale
+        new_residual = adjusted - decoded
+        reduced = reduced.astype(x.dtype)
+    out = jax.lax.all_gather(reduced, inner_axis, axis=0, tiled=True)
+    return out, new_residual
 
 
 def flat_psum(x: jax.Array, *, pod_axis: str = "pod",
               inner_axis: str = "data") -> jax.Array:
     """Baseline: single flat all-reduce over both axes (for §Perf compare)."""
     return jax.lax.psum(x, (pod_axis, inner_axis))
+
+
+# ------------------------------------------------------- comm byte accounting
+@dataclasses.dataclass(frozen=True)
+class CommPlan:
+    """Static per-step collective-byte model of one mesh train step.
+
+    All numbers are *per device, per step*, derived from shapes alone —
+    deterministic across machines, so the ``bench_mesh`` rows built from
+    them can be gated by ``benchmarks.run --compare``. Three collectives
+    per step:
+
+    * **dedup pool** — all-gather of each device's FILL-padded local
+      uniques (stage 1 -> stage 2 of the two-stage dedup), int32;
+    * **exchange** — replication of the working set (rows + Adagrad
+      accumulators) from the row shards, fp32 (parameters are never
+      quantized);
+    * **allreduce** — the gradient reduction (working-set grads + flat
+      dense grads), at the codec's wire width when hierarchical.
+    """
+
+    n_pods: int
+    inner: int                       # devices per pod (the "pod_size")
+    codec: Optional[str]             # None | "bf16" | "int8"
+    hierarchical: bool
+    allreduce_elems: int             # grad elements reduced per step
+    exchange_elems: int              # working-set fp32 elements replicated
+    dedup_pool_elems: int            # local-unique int32 ids pooled (per dev)
+    flat_id_elems: int               # raw ids a flat (no local stage) dedup
+    #                                  would pool per device instead
+
+    @staticmethod
+    def for_step(*, n_pods: int, inner: int, compress: Any,
+                 hierarchical: bool, capacity: int, embed_dim: int,
+                 n_dense_elems: int, local_capacity: int,
+                 ids_per_device: int) -> "CommPlan":
+        return CommPlan(
+            n_pods=n_pods, inner=inner, codec=codec_name(compress),
+            hierarchical=hierarchical,
+            allreduce_elems=capacity * embed_dim + n_dense_elems,
+            exchange_elems=capacity * embed_dim + capacity,
+            dedup_pool_elems=local_capacity,
+            flat_id_elems=ids_per_device)
+
+    # ------------------------------------------------------------ structure
+    @property
+    def n_devices(self) -> int:
+        return self.n_pods * self.inner
+
+    @property
+    def wire_itemsize(self) -> int:
+        return WIRE_ITEMSIZE[self.codec]
+
+    def _interpod(self, elems: int, itemsize: int, *, hier: bool) -> int:
+        """Inter-pod bytes of one reduction of ``elems`` elements."""
+        if self.n_pods <= 1:
+            return 0
+        if not hier:
+            return 2 * elems * 4          # flat fp32 all-reduce
+        per_dev = -(-elems // self.inner)  # reduce-scattered shard
+        extra = 8 if itemsize == 1 else 0  # int8 per-call scale, both ways
+        return 2 * per_dev * itemsize + extra
+
+    # ------------------------------------------- per-collective inter-pod B
+    @property
+    def allreduce_interpod_bytes(self) -> int:
+        return self._interpod(self.allreduce_elems, self.wire_itemsize,
+                              hier=self.hierarchical)
+
+    @property
+    def allreduce_interpod_bytes_flat(self) -> int:
+        return self._interpod(self.allreduce_elems, 4, hier=False)
+
+    @property
+    def exchange_interpod_bytes(self) -> int:
+        # parameters stay fp32 on the wire; hierarchy still wins x pod_size
+        return self._interpod(self.exchange_elems, 4,
+                              hier=self.hierarchical)
+
+    @property
+    def exchange_interpod_bytes_flat(self) -> int:
+        return self._interpod(self.exchange_elems, 4, hier=False)
+
+    @property
+    def dedup_interpod_bytes(self) -> int:
+        """Pool gather: ids received from devices in OTHER pods, int32."""
+        other_pods = self.n_devices - self.inner
+        return other_pods * self.dedup_pool_elems * 4
+
+    @property
+    def dedup_interpod_bytes_flat(self) -> int:
+        """A single-stage dedup would pool every raw id instead."""
+        other_pods = self.n_devices - self.inner
+        return other_pods * self.flat_id_elems * 4
+
+    # ------------------------------------------------------------ roll-ups
+    @property
+    def interpod_bytes_per_step(self) -> int:
+        return (self.allreduce_interpod_bytes + self.exchange_interpod_bytes
+                + self.dedup_interpod_bytes)
+
+    @property
+    def interpod_bytes_per_step_flat(self) -> int:
+        return (self.allreduce_interpod_bytes_flat
+                + self.exchange_interpod_bytes_flat
+                + self.dedup_interpod_bytes_flat)
+
+    @property
+    def allreduce_reduction(self) -> float:
+        """flat / hierarchical inter-pod bytes of the gradient all-reduce:
+        ``pod_size * 4 / wire_itemsize`` (pod_size x 2 for bf16) — the
+        gated acceptance ratio."""
+        hier = self.allreduce_interpod_bytes
+        if hier <= 0:
+            return 1.0
+        return self.allreduce_interpod_bytes_flat / hier
+
+    @property
+    def interpod_reduction(self) -> float:
+        hier = self.interpod_bytes_per_step
+        if hier <= 0:
+            return 1.0
+        return self.interpod_bytes_per_step_flat / hier
+
+    def as_metrics(self):
+        from repro.obs.metrics import harvest
+        return harvest(self)
+
+
+@dataclasses.dataclass
+class CommStats:
+    """The ``comm`` tier: collective traffic of the mesh train loop.
+
+    Static per-step bytes come from the :class:`CommPlan`; the driver's
+    step function calls :meth:`on_step` once per step (single-writer:
+    the main train loop), so totals scale with steps. Attached to
+    :class:`~repro.core.pipeline.PipelineStats.comm` by the runners
+    (duck-typed off the train step's ``comm_stats`` attribute) and
+    registered by ``MetricsRegistry.from_pipeline``.
+    """
+
+    plan: CommPlan
+    steps: int = 0
+
+    def on_step(self) -> None:
+        self.steps += 1
+
+    @property
+    def interpod_bytes_total(self) -> int:
+        return self.steps * self.plan.interpod_bytes_per_step
+
+    @property
+    def interpod_bytes_total_flat(self) -> int:
+        return self.steps * self.plan.interpod_bytes_per_step_flat
+
+    def as_metrics(self):
+        from repro.obs.metrics import harvest
+        out = {f"plan_{k}": v for k, v in harvest(self.plan).items()}
+        out.update(harvest(self))
+        return out
+
+    def summary(self) -> str:
+        p = self.plan
+        codec = p.codec or "off"
+        return (f"mesh {p.n_pods}x{p.inner} codec={codec} "
+                f"interpod/step={p.interpod_bytes_per_step / 2**10:.1f}KiB "
+                f"(flat {p.interpod_bytes_per_step_flat / 2**10:.1f}KiB, "
+                f"x{p.interpod_reduction:.1f} less; allreduce "
+                f"x{p.allreduce_reduction:.1f}) steps={self.steps}")

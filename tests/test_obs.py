@@ -126,6 +126,32 @@ def test_complete_records_retroactive_span():
     assert end - start == pytest.approx(5_000.0)  # us
 
 
+def test_complete_on_virtual_track():
+    """complete_on places retroactive spans on a named virtual track (the
+    comm.* collectives tier) without violating the per-track timestamp
+    monotonicity the validator enforces."""
+    t = Tracer(enabled=True)
+    with t.span("train.step"):
+        pass
+    t0 = t.now_ns()
+    t.complete_on("comm.allreduce", "comm.allreduce",
+                  t0 - 4_000_000, t0 - 2_000_000, interpod_bytes=1234)
+    t.complete_on("comm.allreduce", "comm.allreduce",
+                  t0 - 2_000_000, t0, interpod_bytes=1234)
+    d = t.to_dict()
+    names = set(t.track_names().values())
+    assert "comm.allreduce" in names
+    ivals = span_intervals(d, "comm.")
+    assert len(ivals) == 2
+    assert ivals[0][1] - ivals[0][0] == pytest.approx(2_000.0)  # us
+    args = [e["args"] for e in d["traceEvents"]
+            if e.get("ph") == "B" and e["name"] == "comm.allreduce"]
+    assert args and all(a["interpod_bytes"] == 1234 for a in args)
+    # retroactive spans starting before the last wall-clock event on
+    # ANOTHER track must not trip the validator's monotonicity check
+    validate_trace(d)
+
+
 def test_tracks_named_after_threads():
     t = Tracer(enabled=True)
     with t.span("main.work"):
