@@ -70,7 +70,7 @@ from repro.check.findings import Finding
 # Audited by default: the files owning the pipeline's thread-shared
 # state (relative to the repro package root).
 DEFAULT_FILES = ("core/pipeline.py", "core/devicefeed.py", "io/stream.py",
-                 "embedding/psfeed.py")
+                 "embedding/psfeed.py", "train/fault.py", "io/chaos.py")
 
 _DECOS = {"guarded_by", "shared_entry", "single_writer"}
 _CTOR = {"__init__", "__post_init__"}

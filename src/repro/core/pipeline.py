@@ -79,6 +79,10 @@ class PipelineStats:
     # When the train step runs on a device mesh, its CommStats (static
     # collective-byte plan x steps) are attached here after run().
     comm: Optional[Any] = None
+    # When the batch source is a lease-based StreamingLoader, its
+    # FaultStats (reissued leases, retries, backup wins, reap latency)
+    # are attached here after run() — the recovery story of the run.
+    fault: Optional[Any] = None
 
     @property
     def adapt_seconds(self) -> float:
@@ -145,6 +149,17 @@ def _capture_ingest(stats: PipelineStats, batches: Any) -> None:
     src_stats = getattr(batches, "stats", None)
     if src_stats is not None and hasattr(src_stats, "bytes_read"):
         stats.ingest = src_stats
+
+
+def _capture_fault(stats: PipelineStats, batches: Any) -> None:
+    """Adopt recovery stats from a lease-based StreamingLoader source.
+
+    Duck-typed off ``fault_stats`` so core stays import-independent of
+    :mod:`repro.io` / :mod:`repro.train`.
+    """
+    fs = getattr(batches, "fault_stats", None)
+    if fs is not None and hasattr(fs, "reissued"):
+        stats.fault = fs
 
 
 def _capture_train_feed(stats: PipelineStats, train_step: Any) -> None:
@@ -432,6 +447,7 @@ class PipelinedRunner:
                 self.stats.ps = self.ps_feed
             self.stats.wall_seconds = time.perf_counter() - t_start
             _capture_ingest(self.stats, batches)
+            _capture_fault(self.stats, batches)
             _capture_train_feed(self.stats, self.train_step)
             _capture_comm(self.stats, self.train_step)
         return state
@@ -498,6 +514,7 @@ class StagedRunner:
             all_batches = list(batches)
         self.stats.drain_seconds = time.perf_counter() - t_start
         _capture_ingest(self.stats, batches)
+        _capture_fault(self.stats, batches)
         # Stage-after-stage: run *every* batch through layer k, materialize,
         # then move to layer k+1 — the defining property of the baseline.
         envs: List[Dict[str, Any]] = [dict(b) for b in all_batches]

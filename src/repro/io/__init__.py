@@ -9,11 +9,22 @@ the scaled-down stand-in for that ingest tier:
 * :mod:`repro.io.dataset` — shard discovery, manifests, and deterministic
   host-sharded assignment so ingestion composes with ``launch/mesh.py``.
 * :mod:`repro.io.stream` — multi-worker prefetching :class:`StreamingLoader`
-  with bounded queues, backpressure, and ingest statistics.
+  with bounded queues, backpressure, ingest statistics, and lease-based
+  fault tolerance (``ShardServer`` scheduling, reap/retry/backup recovery).
+* :mod:`repro.io.chaos` — deterministic fault injection (kill/delay/
+  transient/corrupt schedules) for proving the recovery paths.
 * :mod:`repro.io.convert` — bulk conversion from ``fe.datagen`` views and
   ``fe.colstore`` chunks into shards.
 """
 
+from repro.io.chaos import (
+    ChaosEvent,
+    ChaosInjector,
+    ChaosKill,
+    ChaosTransientIOError,
+    parse_chaos_spec,
+    random_schedule,
+)
 from repro.io.shardfmt import (
     SHARD_SUFFIX,
     ShardFormatError,
@@ -27,6 +38,10 @@ from repro.io.stream import IngestStats, StreamingLoader
 from repro.io.convert import colstore_to_shards, views_to_shard, write_view_shards
 
 __all__ = [
+    "ChaosEvent",
+    "ChaosInjector",
+    "ChaosKill",
+    "ChaosTransientIOError",
     "IngestStats",
     "SHARD_SUFFIX",
     "ShardDataset",
@@ -37,6 +52,8 @@ __all__ = [
     "StreamingLoader",
     "assign_shards",
     "colstore_to_shards",
+    "parse_chaos_spec",
+    "random_schedule",
     "read_shard",
     "views_to_shard",
     "write_manifest",

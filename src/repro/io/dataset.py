@@ -147,6 +147,21 @@ class ShardDataset:
             (seed, epoch)).permutation(len(local))
         return [local[i] for i in perm]
 
+    def epoch_plan(self, epochs: int, *, shuffle: bool = False,
+                   seed: int = 0) -> List[ShardInfo]:
+        """Concatenated :meth:`epoch_order` over ``epochs`` passes.
+
+        This is the loader's full lease plan: plan index == shard id in
+        :class:`~repro.train.fault.ShardServer`, so one ShardInfo appears
+        once per epoch under distinct ids and restarts replay identically.
+        """
+        if epochs < 1:
+            raise ValueError(f"epochs must be >= 1, got {epochs}")
+        plan: List[ShardInfo] = []
+        for epoch in range(epochs):
+            plan.extend(self.epoch_order(epoch, shuffle=shuffle, seed=seed))
+        return plan
+
     def __len__(self) -> int:
         return len(self.local_shards)
 

@@ -1,11 +1,39 @@
-"""Multi-worker prefetching shard loader with backpressure accounting.
+"""Fault-tolerant multi-worker shard loader with lease-based scheduling.
 
 :class:`StreamingLoader` turns a :class:`~repro.io.dataset.ShardDataset`
 (or a plain list of shard paths) into an iterator of ``{table: columns}``
 environments — exactly the batch shape the FE runners consume — while a
-pool of reader threads keeps the disk busy:
+pool of reader threads keeps the disk busy. Shards are *leased* from a
+:class:`~repro.train.fault.ShardServer` rather than drained from a static
+queue (ROADMAP item 4):
 
-    work queue (shard infos) -> N reader threads -> bounded output queue
+    ShardServer (leases) <- N reader threads -> bounded output queue
+          ^  ^
+          |  heartbeat thread (keeps live readers' leases fresh)
+          reaper thread (expires dead readers' leases; issues backups)
+
+Recovery story, proven by ``tests/test_chaos.py`` under injected faults
+(:mod:`repro.io.chaos`):
+
+* A reader that dies mid-shard stops heartbeating; the reaper returns its
+  lease to the queue and another reader re-reads the shard — no data loss.
+  The consumer respawns chaos-killed readers (bounded budget) so even a
+  single-worker pool survives.
+* ``StragglerPolicy`` duplicate-issues shards running slower than
+  p50 x factor; commits are strictly first-wins in the server, so every
+  shard is yielded downstream **exactly once** (losers discard their copy).
+* Transient ``OSError`` reads get bounded retry-with-backoff (``io.retry``
+  spans); :class:`~repro.io.shardfmt.ShardFormatError` — checksum/format
+  corruption — still fails the job fast, never retried.
+* Commit-then-yield ordering: a reader publishes to the consumer only
+  after winning the commit, and nothing can kill it between the two
+  (chaos kill points are pre-commit by design; threads don't die
+  spontaneously between adjacent statements), so the commit log is
+  exactly the set of yielded shards.
+* ``ordered=True`` re-sequences completions into plan order through a
+  small consumer-side reorder buffer, making a chaos run's yielded stream
+  *bit-identical* to the failure-free run — at the cost of head-of-line
+  blocking on the oldest outstanding shard.
 
 The output queue bounds memory (backpressure: readers block when the
 consumer falls behind) and :class:`IngestStats` records where time went:
@@ -15,6 +43,12 @@ consumer falls behind) and :class:`IngestStats` records where time went:
   (consumer-bound: the trainer can't keep up),
 * ``consumer_stall_seconds``— consumer blocked on an empty queue
   (reader-bound: the disk can't keep up).
+
+Only the commit *winner* updates :class:`IngestStats` (``stats.shards``
+stays the epoch's shard count under duplicate reads); recovery activity is
+a separate tier, :class:`~repro.train.fault.FaultStats`, exposed as
+:attr:`StreamingLoader.fault_stats` and registered as the ``fault.*``
+metrics tier.
 
 Reader-thread exceptions are re-raised in the consumer, so a corrupt shard
 fails the training job instead of silently shrinking the epoch.
@@ -26,15 +60,16 @@ import dataclasses
 import queue
 import threading
 import time
-from typing import Any, Callable, Dict, Iterator, List, Mapping, Optional, Sequence, Union
+from typing import (Any, Callable, Dict, Iterator, List, Mapping, Optional,
+                    Sequence, Union)
 
 from repro.check.annotations import guarded_by, single_writer
+from repro.io.chaos import ChaosInjector, ChaosKill
 from repro.io.dataset import ShardDataset, ShardInfo
 from repro.io.shardfmt import ShardReader
 from repro.obs.metrics import harvest
 from repro.obs.trace import get_tracer
-
-_WORKER_DONE = object()
+from repro.train.fault import FaultStats, ShardServer, StragglerPolicy
 
 
 @dataclasses.dataclass
@@ -84,13 +119,17 @@ class IngestStats:
 
 
 # Thread contract (verified by `python -m repro.check` / repro.check.lockset):
-# N reader threads and the consuming thread both update IngestStats, so
-# every write to `stats` (including the per-pass rebind in __iter__) holds
-# _lock; the thread-pool plumbing is only ever touched by the consumer.
-@guarded_by("_lock", "stats")
-@single_writer("_threads", "_out", "_running")
+# N reader threads and the consuming thread both update IngestStats and the
+# active-lease map the heartbeater reads, so every write to `stats` /
+# `_active` (including the per-pass rebinds in __iter__) holds _lock. The
+# pool plumbing — thread lists, the lease server, the plan, the respawn
+# budget — is only ever written by the consumer thread (spawn/respawn/close
+# all happen there); readers and the aux threads only read it.
+@guarded_by("_lock", "stats", "_active")
+@single_writer("_threads", "_aux_threads", "_reader_threads", "_out",
+               "_running", "_server", "_plan", "_respawns", "_clean")
 class StreamingLoader:
-    """Iterate shard environments with a prefetching reader pool.
+    """Iterate shard environments with a fault-tolerant reader pool.
 
     Parameters
     ----------
@@ -117,6 +156,30 @@ class StreamingLoader:
         ``columns_decoded`` make the saving observable.
     verify:
         Verify payload checksums while decoding (default on).
+    lease_timeout:
+        Seconds without a heartbeat before the reaper returns a reader's
+        shard to the queue. Small values recover faster but may reap a
+        reader that is merely slow (first-commit-wins makes that safe,
+        just wasteful).
+    retries / retry_backoff:
+        Bounded retry for transient ``OSError`` reads: up to ``retries``
+        re-reads with exponential backoff starting at ``retry_backoff``
+        seconds. Corruption (``ShardFormatError``) is never retried.
+    straggler:
+        Optional :class:`~repro.train.fault.StragglerPolicy`; by default a
+        fresh policy per pass duplicate-issues shards slower than
+        p50 x factor.
+    chaos:
+        Optional :class:`~repro.io.chaos.ChaosInjector` firing scheduled
+        faults at the lease lifecycle's injection points (tests/demos).
+    ordered:
+        Yield in plan order via a consumer-side reorder buffer (makes
+        multi-worker and chaos runs bit-identical to ``workers=1``); off
+        by default — completion order maximizes pipeline overlap.
+    max_respawns:
+        Budget for replacing dead readers (default ``2*workers + 2``);
+        exhausting it raises instead of looping forever under a
+        kill-everything chaos schedule.
     """
 
     def __init__(self, source: Union[ShardDataset, Sequence],
@@ -125,13 +188,21 @@ class StreamingLoader:
                  transform: Optional[Callable[[Dict[str, Any], ShardInfo],
                                               Dict[str, Any]]] = None,
                  columns: Optional[Mapping[str, Sequence[str]]] = None,
-                 verify: bool = True):
+                 verify: bool = True,
+                 lease_timeout: float = 30.0,
+                 retries: int = 2, retry_backoff: float = 0.05,
+                 straggler: Optional[StragglerPolicy] = None,
+                 chaos: Optional[ChaosInjector] = None,
+                 ordered: bool = False,
+                 max_respawns: Optional[int] = None):
         if workers < 1:
             raise ValueError(f"workers must be >= 1, got {workers}")
         if prefetch < 1:
             raise ValueError(f"prefetch must be >= 1, got {prefetch}")
         if epochs < 1:
             raise ValueError(f"epochs must be >= 1, got {epochs}")
+        if retries < 0:
+            raise ValueError(f"retries must be >= 0, got {retries}")
         self.source = source
         self.workers = workers
         self.prefetch = prefetch
@@ -142,12 +213,26 @@ class StreamingLoader:
         self.columns = (None if columns is None
                         else {t: tuple(c) for t, c in columns.items()})
         self.verify = verify
+        self.lease_timeout = lease_timeout
+        self.retries = retries
+        self.retry_backoff = retry_backoff
+        self.straggler = straggler
+        self.chaos = chaos
+        self.ordered = ordered
+        self.max_respawns = max_respawns
         self.stats = IngestStats()
         self._lock = threading.Lock()
         self._stop = threading.Event()
         self._threads: List[threading.Thread] = []
+        self._aux_threads: List[threading.Thread] = []
+        self._reader_threads: Dict[str, threading.Thread] = {}
         self._out: Optional[queue.Queue] = None
         self._running = False
+        self._server: Optional[ShardServer] = None
+        self._plan: List[ShardInfo] = []
+        self._active: Dict[str, int] = {}
+        self._clean: set = set()
+        self._respawns = 0
 
     @property
     def rows_hint(self) -> Optional[int]:
@@ -165,58 +250,203 @@ class StreamingLoader:
                 if isinstance(s, ShardInfo) and s.n_rows]
         return max(rows) if rows else None
 
+    @property
+    def fault_stats(self) -> FaultStats:
+        """The current (or last) pass's recovery counters — the ``fault.*``
+        metrics tier, owned by the lease server."""
+        server = self._server
+        return server.stats if server is not None else FaultStats()
+
     # ------------------------------------------------------------- plumbing
     def _shard_plan(self) -> List[ShardInfo]:
+        if isinstance(self.source, ShardDataset):
+            return self.source.epoch_plan(self.epochs, shuffle=self.shuffle,
+                                          seed=self.seed)
         plan: List[ShardInfo] = []
-        for epoch in range(self.epochs):
-            if isinstance(self.source, ShardDataset):
-                plan.extend(self.source.epoch_order(
-                    epoch, shuffle=self.shuffle, seed=self.seed))
-            else:
-                items = list(self.source)
-                for i, it in enumerate(items):
-                    if not isinstance(it, ShardInfo):
-                        import os
-                        it = ShardInfo(path=str(it),
-                                       nbytes=os.path.getsize(str(it)),
-                                       n_rows=0, seq=i)
-                    plan.append(it)
+        for _epoch in range(self.epochs):
+            for i, it in enumerate(self.source):
+                if not isinstance(it, ShardInfo):
+                    import os
+                    it = ShardInfo(path=str(it),
+                                   nbytes=os.path.getsize(str(it)),
+                                   n_rows=0, seq=i)
+                plan.append(it)
         return plan
 
-    def _reader(self, work: "queue.Queue", out: "queue.Queue") -> None:
+    def _read_with_retry(self, info: ShardInfo, sid: int, worker_id: str):
+        """One shard read with bounded transient-error retry.
+
+        Returns ``(reader, env, seconds)``. ``OSError`` (real filesystem
+        hiccups and injected :class:`ChaosTransientIOError`) retries up to
+        ``self.retries`` times with exponential backoff, heartbeating the
+        lease between attempts; :class:`ShardFormatError` (corruption) and
+        :class:`ChaosKill` pass straight through.
+        """
         tracer = get_tracer()
-        info: Optional[ShardInfo] = None
-        try:
-            while not self._stop.is_set():
-                try:
-                    info = work.get_nowait()
-                except queue.Empty:
-                    break
-                t0 = time.perf_counter()
-                with tracer.span("io.read_shard", seq=info.seq):
+        attempt = 0
+        while True:
+            t0 = time.perf_counter()
+            try:
+                with tracer.span("io.read_shard", seq=info.seq,
+                                 attempt=attempt):
+                    if self.chaos is not None:
+                        self.chaos.trip("read", sid, worker_id)
                     reader = ShardReader(info.path, verify=self.verify)
                     env = reader.read_all(self.columns)
                     if self.transform is not None:
                         env = self.transform(env, info)
-                dt = time.perf_counter() - t0
+                return reader, env, time.perf_counter() - t0
+            except OSError as e:
+                attempt += 1
+                if attempt > self.retries:
+                    raise
+                server = self._server
+                if server is not None:
+                    server.record_retry()
+                    server.heartbeat(worker_id, sid)
+                w0 = tracer.now_ns() if tracer.enabled else 0
+                aborted = self._stop.wait(
+                    self.retry_backoff * (2 ** (attempt - 1)))
+                if tracer.enabled:
+                    tracer.complete("io.retry", w0, tracer.now_ns(),
+                                    seq=info.seq, attempt=attempt,
+                                    error=type(e).__name__)
+                if aborted:
+                    raise
+
+    def _lease_reader(self, worker_id: str, out: "queue.Queue") -> None:
+        """Reader-thread body: acquire -> read (retry) -> commit -> publish.
+
+        Publish strictly follows a *winning* commit, so the server's commit
+        log is exactly the multiset of yielded shards; a lost commit race
+        (backup or reissued duplicate finished first) discards the copy
+        without touching IngestStats.
+        """
+        tracer = get_tracer()
+        server = self._server
+        info: Optional[ShardInfo] = None
+        try:
+            while not self._stop.is_set():
+                sid = server.acquire(worker_id)
+                if sid is None:
+                    if server.done():
+                        break
+                    # In-flight leases may yet be reaped or backed up.
+                    time.sleep(0.005)
+                    continue
+                info = self._plan[sid]
                 with self._lock:
-                    self.stats.shards += 1
-                    self.stats.bytes_read += reader.nbytes
-                    self.stats.bytes_decoded += reader.bytes_decoded
-                    self.stats.columns_decoded += reader.columns_decoded
-                    self.stats.read_seconds += dt
-                self._put(out, env)
+                    self._active[worker_id] = sid
+                try:
+                    if self.chaos is not None:
+                        self.chaos.trip("acquire", sid, worker_id)
+                    reader, env, dt = self._read_with_retry(
+                        info, sid, worker_id)
+                    if self.chaos is not None:
+                        # Worst kill point: work done but unacknowledged.
+                        self.chaos.trip("commit", sid, worker_id)
+                finally:
+                    with self._lock:
+                        self._active.pop(worker_id, None)
+                if server.commit(worker_id, sid):
+                    with self._lock:
+                        self.stats.shards += 1
+                        self.stats.bytes_read += reader.nbytes
+                        self.stats.bytes_decoded += reader.bytes_decoded
+                        self.stats.columns_decoded += reader.columns_decoded
+                        self.stats.read_seconds += dt
+                    self._put(out, (sid, env))
+        except ChaosKill:
+            # Simulated silent death: no fail_worker, no error to the
+            # consumer — recovery must come from the lease reaper, exactly
+            # as for a SIGKILL'd worker.
+            if tracer.enabled:
+                tracer.instant("fault.kill", worker=worker_id)
+            return
         except BaseException as e:  # propagate to the consumer
+            server.fail_worker(worker_id)
             self._put(out, _ReaderError(e, info.path if info else "?"),
                       force=True)
-        finally:
-            self._put(out, _WORKER_DONE, force=True)
+            return
+        with self._lock:
+            self._clean.add(worker_id)
+
+    def _heartbeat_loop(self) -> None:
+        """Refresh every live reader's lease; a dead reader's lease goes
+        stale (the thread-alive check is what lets the reaper notice)."""
+        server = self._server
+        interval = max(min(self.lease_timeout / 4.0, 1.0), 0.01)
+        while not self._stop.is_set():
+            with self._lock:
+                active = dict(self._active)
+            threads = dict(self._reader_threads)
+            for worker_id, sid in active.items():
+                t = threads.get(worker_id)
+                if t is not None and t.is_alive():
+                    server.heartbeat(worker_id, sid)
+            if server.done():
+                break
+            self._stop.wait(interval)
+
+    def _reaper_loop(self) -> None:
+        """Expire dead readers' leases and duplicate-issue stragglers."""
+        tracer = get_tracer()
+        server = self._server
+        interval = max(min(self.lease_timeout / 2.0, 1.0), 0.01)
+        while not self._stop.is_set():
+            w0 = tracer.now_ns() if tracer.enabled else 0
+            reissued = server.reap()
+            if reissued and tracer.enabled:
+                tracer.complete("fault.reap", w0, tracer.now_ns(),
+                                reissued=len(reissued))
+            for sid in server.issue_backups():
+                if tracer.enabled:
+                    tracer.instant("fault.backup", shard=sid)
+            if server.done():
+                break
+            self._stop.wait(interval)
+
+    def _ensure_readers(self, out: "queue.Queue") -> None:
+        """Consumer-side pool supervision (runs when the queue goes quiet):
+        respawn readers that died without finishing (chaos kills), within
+        the respawn budget; raise if the whole pool is gone with shards
+        still uncommitted."""
+        server = self._server
+        if server is None or server.done() or self._stop.is_set():
+            return
+        with self._lock:
+            clean = set(self._clean)
+        dead = [wid for wid, t in self._reader_threads.items()
+                if not t.is_alive() and wid not in clean]
+        if not dead:
+            return
+        tracer = get_tracer()
+        budget = (self.max_respawns if self.max_respawns is not None
+                  else 2 * self.workers + 2)
+        for wid in dead:
+            self._reader_threads.pop(wid, None)
+            if self._respawns >= budget:
+                raise RuntimeError(
+                    f"shard reader pool exhausted: {self._respawns} respawns "
+                    f"used and reader {wid!r} died with shards uncommitted")
+            self._respawns += 1
+            server.record_respawn()
+            new_wid = f"reader-r{self._respawns}"
+            t = threading.Thread(target=self._lease_reader,
+                                 args=(new_wid, out), daemon=True,
+                                 name=f"shard-reader-r{self._respawns}")
+            self._reader_threads[new_wid] = t
+            self._threads.append(t)
+            t.start()
+            if tracer.enabled:
+                tracer.instant("fault.respawn", worker=new_wid,
+                               replacing=wid)
 
     def _put(self, out: "queue.Queue", item: Any, *, force: bool = False) -> None:
         """Bounded put that respects close(); stall time is backpressure.
 
-        After close() the consumer is gone, so every put (sentinels
-        included) aborts rather than spinning on a full queue.
+        After close() the consumer is gone, so every put (errors included)
+        aborts rather than spinning on a full queue.
         """
         tracer = get_tracer()
         w0 = tracer.now_ns() if tracer.enabled else 0
@@ -246,33 +476,56 @@ class StreamingLoader:
         # Under _lock: a prior pass's readers may still be draining.
         with self._lock:
             self.stats = IngestStats()
+            self._active = {}
         plan = self._shard_plan()
-        work: "queue.Queue" = queue.Queue()
-        for info in plan:
-            work.put(info)
-        # DONE sentinels flow through the bounded queue too, so capacity
-        # must fit them even when every worker finishes at once.
+        self._plan = plan
+        self._server = ShardServer(
+            len(plan), lease_timeout=self.lease_timeout,
+            straggler=(self.straggler if self.straggler is not None
+                       else StragglerPolicy()))
         out: "queue.Queue" = queue.Queue(
             maxsize=max(self.prefetch, self.workers))
         n_workers = min(self.workers, max(1, len(plan)))
         self._stop.clear()
         self._out = out
-        self._threads = [
-            threading.Thread(target=self._reader, args=(work, out),
-                             daemon=True, name=f"shard-reader-{i}")
-            for i in range(n_workers)
+        self._clean = set()
+        self._respawns = 0
+        self._reader_threads = {}
+        for i in range(n_workers):
+            wid = f"reader-{i}"
+            self._reader_threads[wid] = threading.Thread(
+                target=self._lease_reader, args=(wid, out),
+                daemon=True, name=f"shard-reader-{i}")
+        self._threads = list(self._reader_threads.values())
+        self._aux_threads = [
+            threading.Thread(target=self._heartbeat_loop, daemon=True,
+                             name="shard-heartbeat"),
+            threading.Thread(target=self._reaper_loop, daemon=True,
+                             name="shard-reaper"),
         ]
         self._running = True
         t_start = time.perf_counter()
         for t in self._threads:
             t.start()
+        for t in self._aux_threads:
+            t.start()
         tracer = get_tracer()
-        done = 0
+        n_items = len(plan)
+        received = 0
+        next_out = 0
+        hold: Dict[int, Any] = {}  # ordered-mode reorder buffer
         try:
-            while done < n_workers:
+            while received < n_items:
                 w0 = tracer.now_ns() if tracer.enabled else 0
                 t0 = time.perf_counter()
-                item = out.get()
+                item = None
+                while item is None:
+                    try:
+                        item = out.get(timeout=0.05)
+                    except queue.Empty:
+                        # Quiet queue: check the pool (a chaos-killed
+                        # reader is invisible until someone looks).
+                        self._ensure_readers(out)
                 stall = time.perf_counter() - t0
                 if stall > 1e-4:
                     # Under _lock: readers concurrently update sibling
@@ -287,13 +540,18 @@ class StreamingLoader:
                     self.stats.max_queue_depth = max(
                         self.stats.max_queue_depth, out.qsize() + 1)
                 tracer.counter("io.queue_depth", out.qsize() + 1)
-                if item is _WORKER_DONE:
-                    done += 1
-                    continue
                 if isinstance(item, _ReaderError):
                     raise RuntimeError(
                         f"shard reader failed on {item.shard}") from item.exc
-                yield item
+                sid, env = item
+                received += 1
+                if self.ordered:
+                    hold[sid] = env
+                    while next_out in hold:
+                        yield hold.pop(next_out)
+                        next_out += 1
+                else:
+                    yield env
         finally:
             with self._lock:
                 self.stats.wall_seconds += time.perf_counter() - t_start
@@ -306,7 +564,7 @@ class StreamingLoader:
         flight), so drain-and-join loops until every thread has exited.
         """
         self._stop.set()
-        for t in self._threads:
+        for t in self._threads + self._aux_threads:
             while t.is_alive():
                 if self._out is not None:
                     try:
@@ -316,4 +574,6 @@ class StreamingLoader:
                         pass
                 t.join(timeout=0.1)
         self._threads = []
+        self._aux_threads = []
+        self._reader_threads = {}
         self._running = False

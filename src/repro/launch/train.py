@@ -117,11 +117,28 @@ def run_streaming(args, spec, cfg, state, opt, check_report=None) -> None:
     plan = featureplan.compile(get_spec(args.spec))
     print(plan.summary())
     epochs = -(-args.steps // len(ds))  # enough passes for --steps
+    chaos = None
+    if args.chaos:
+        if not args.fault_tolerant:
+            raise SystemExit(
+                "--chaos injects faults into the lease-based reader pool "
+                "and needs the ordered fault-tolerant yield contract: "
+                "pass --fault-tolerant")
+        from repro.io.chaos import ChaosInjector
+        chaos = ChaosInjector.from_spec(args.chaos)
+        print(f"chaos: {len(chaos.events)} scheduled fault(s) "
+              f"({args.chaos})")
     # Projection pushdown: only the columns the spec touches are decoded.
+    # Shards are leased from a ShardServer (reap/retry/backup recovery);
+    # --fault-tolerant additionally re-sequences completions into plan
+    # order so a run with failures yields bit-identical data to one
+    # without.
     loader = StreamingLoader(ds, workers=args.stream_workers,
                              prefetch=args.stream_prefetch, epochs=epochs,
                              shuffle=True, seed=0,
-                             columns=plan.required_columns)
+                             columns=plan.required_columns,
+                             lease_timeout=args.lease_timeout,
+                             chaos=chaos, ordered=args.fault_tolerant)
     ckpt = (CheckpointManager(args.checkpoint_dir)
             if args.checkpoint_dir else None)
 
@@ -138,9 +155,24 @@ def run_streaming(args, spec, cfg, state, opt, check_report=None) -> None:
                          rows_hint=loader.rows_hint)
     cfg = mf.config
     mesh = None
+    n_pods = n_data = 1
     if args.mesh:
         from repro.launch.mesh import make_train_mesh, parse_mesh_spec
-        n_pods, n_data = parse_mesh_spec(args.mesh)
+        if args.mesh == "auto":
+            # Elastic topology: size the mesh to whatever devices are
+            # healthy right now. With --resume this is the remesh path —
+            # checkpoint under one device count, restart under another,
+            # and the restored state is re-placed on the new mesh.
+            from repro.train.fault import elastic_remesh
+            n_healthy = len(jax.devices())
+            shape, _axes, n_used = elastic_remesh(
+                n_healthy, model_parallel=1, pod_size=args.pod_size)
+            n_pods, n_data = ((shape[0], shape[1]) if len(shape) == 3
+                              else (1, shape[0]))
+            print(f"elastic mesh: {n_healthy} healthy device(s) -> "
+                  f"{n_pods}x{n_data} ({n_used} used)")
+        else:
+            n_pods, n_data = parse_mesh_spec(args.mesh)
         n_mesh_dev = n_pods * n_data
         if n_mesh_dev > 1 and args.device_feed != "off":
             raise SystemExit(
@@ -198,6 +230,27 @@ def run_streaming(args, spec, cfg, state, opt, check_report=None) -> None:
     else:
         raw_step, _, _ = R.make_sparse_train_step(cfg, opt)
         extra_slots = ()
+
+    # Restart-from-latest, possibly across a remesh: the checkpoint holds
+    # host arrays (topology-free), so restoring into the *current* state
+    # structure and re-placing with shard_train_state adapts it to
+    # whatever mesh this run resolved (the elastic_remesh contract).
+    start_step = 0
+    if args.resume:
+        if ckpt is None:
+            raise SystemExit("--resume requires --checkpoint-dir")
+        restored = ckpt.restore_latest(state)
+        if restored is None:
+            print("resume: no checkpoint found; starting fresh")
+        else:
+            step0, state = restored
+            prev_mesh = ckpt.latest_meta().get("mesh")
+            if mesh is not None:
+                state["params"], state["opt"] = R.shard_train_state(
+                    mesh, state["params"], state["opt"])
+            start_step = step0 + 1
+            print(f"resume: restored step {step0} "
+                  f"(saved mesh {prev_mesh}, current [{n_pods}, {n_data}])")
 
     layers = plan.layers
     feeder = None
@@ -294,7 +347,8 @@ def run_streaming(args, spec, cfg, state, opt, check_report=None) -> None:
                     codec=cp.codec or "off")
         state = {"params": p, "opt": o}
         if ckpt is not None and len(losses) % args.checkpoint_every == 0:
-            ckpt.save_async(len(losses) - 1, state)
+            ckpt.save_async(start_step + len(losses) - 1, state,
+                            meta={"mesh": [n_pods, n_data]})
         return state
 
     step_fn.feed_stats = mf.stats  # runners adopt the train-feed tier
@@ -324,6 +378,7 @@ def run_streaming(args, spec, cfg, state, opt, check_report=None) -> None:
             ckpt.wait()
     # islice hides the loader from the runner's duck-typed stats capture
     runner.stats.ingest = loader.stats
+    runner.stats.fault = loader.fault_stats
     dt = time.perf_counter() - t0
     s = runner.stats
     if not losses:
@@ -334,6 +389,13 @@ def run_streaming(args, spec, cfg, state, opt, check_report=None) -> None:
           f"fe={s.fe_seconds:.2f}s train={s.train_net_seconds:.2f}s "
           f"adapt={s.adapt_seconds:.3f}s wall={s.wall_seconds:.2f}s)")
     print(f"ingest: {loader.stats.summary()}")
+    fs = loader.fault_stats
+    if args.fault_tolerant or fs.reissued or fs.retries or fs.failed_workers:
+        print(f"fault: {fs.summary()}")
+    if chaos is not None:
+        fired = {k: v for k, v in chaos.fired.items() if v}
+        print(f"chaos: fired {fired or 'nothing'}"
+              f"{'' if chaos.exhausted() else ' (schedule NOT exhausted)'}")
     if s.feed is not None:
         print(f"device-feed: {s.feed.summary()}")
     if s.train_feed is not None:
@@ -374,6 +436,33 @@ def main() -> None:
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--checkpoint-every", type=int, default=25)
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the latest checkpoint from "
+                         "--checkpoint-dir before training (streaming "
+                         "mode); with --mesh auto the restored host arrays "
+                         "are re-placed on the mesh the current device "
+                         "count resolves to — the elastic remesh-resume "
+                         "path")
+    # fault tolerance (repro.train.fault + repro.io.chaos)
+    ap.add_argument("--fault-tolerant", action="store_true",
+                    help="ordered fault-tolerant streaming: yield shards "
+                         "in plan order through a reorder buffer so a run "
+                         "with worker failures is bit-identical to one "
+                         "without, and print the fault.* recovery summary "
+                         "(lease scheduling itself is always on)")
+    ap.add_argument("--lease-timeout", type=float, default=30.0,
+                    help="seconds without a heartbeat before the reaper "
+                         "returns a shard reader's lease to the queue")
+    ap.add_argument("--chaos", default=None, metavar="SPEC",
+                    help="inject scheduled faults into the reader pool "
+                         "(requires --fault-tolerant): comma-separated "
+                         "kind@shard[:point][:arg] events, e.g. "
+                         "'kill@3,transient@1:read:2,delay@2:read:0.05,"
+                         "kill@5:commit' — see repro.io.chaos")
+    ap.add_argument("--pod-size", type=int, default=None,
+                    help="devices per pod for --mesh auto: lets "
+                         "elastic_remesh pick a 3-axis (pod, data, model) "
+                         "topology when enough devices are healthy")
     # streaming-ingest mode (repro.io)
     ap.add_argument("--data-dir", default=None,
                     help="stream .fbshard raw-log shards instead of "
@@ -394,7 +483,10 @@ def main() -> None:
                          "embedding feed")
     ap.add_argument("--mesh", default=None, metavar="PODSxDATA",
                     help="run the streaming train loop data-parallel on a "
-                         "('pod', 'data') device mesh, e.g. 2x4: embedding "
+                         "('pod', 'data') device mesh, e.g. 2x4, or 'auto' "
+                         "to let elastic_remesh size the mesh from the "
+                         "healthy device count (see --pod-size, --resume): "
+                         "embedding "
                          "rows + Adagrad accumulators sharded over all "
                          "devices, two-stage (local->global) id dedup, "
                          "hierarchical cross-pod gradient reduction; "
@@ -531,6 +623,10 @@ def _run(args) -> None:
                 "--mesh is incompatible with --embedding hierarchy (the PS "
                 "pull path assumes a single device holds the working set); "
                 "pick one scale-out axis")
+    if (args.resume or args.fault_tolerant or args.chaos) and not args.data_dir:
+        raise SystemExit(
+            "--resume/--fault-tolerant/--chaos operate on the streaming "
+            "ingest tier: pass --data-dir")
     key = jax.random.PRNGKey(0)
     opt = adamw(args.lr)
     check_report = _preflight(args, spec) if args.check else None

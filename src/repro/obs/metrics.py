@@ -128,7 +128,7 @@ class MetricsRegistry:
         exec_stats = getattr(stats, "exec_stats", None)
         if exec_stats is not None:
             reg.register("exec", exec_stats)
-        for tier in ("ingest", "feed", "train_feed", "ps", "comm"):
+        for tier in ("ingest", "feed", "train_feed", "ps", "comm", "fault"):
             obj = getattr(stats, tier, None)
             if obj is not None:
                 reg.register(tier, obj)
@@ -189,6 +189,14 @@ def pipeline_rollup(stats: Any) -> Dict[str, Number]:
     plan = getattr(comm, "plan", None)
     out["comm_interpod_reduction"] = \
         float(getattr(plan, "interpod_reduction", 1.0)) if plan else 1.0
+    # fault-tolerance tier (0 when the loader saw no failures / is static)
+    fault = getattr(stats, "fault", None)
+    out["fault_reissued"] = int(getattr(fault, "reissued", 0)) if fault else 0
+    out["fault_retries"] = int(getattr(fault, "retries", 0)) if fault else 0
+    out["fault_backup_wins"] = \
+        int(getattr(fault, "backup_wins", 0)) if fault else 0
+    out["fault_failed_workers"] = \
+        int(getattr(fault, "failed_workers", 0)) if fault else 0
     if wall > 0:
         for stage in ("disk", "fe", "h2d", "train"):
             out[f"{stage}_busy_fraction"] = \

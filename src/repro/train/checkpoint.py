@@ -52,8 +52,16 @@ class CheckpointManager:
         self._sweep_stale_tmp()
 
     # ------------------------------------------------------------------ save
-    def save(self, step: int, tree: Any) -> str:
-        """Synchronous atomic save of this host's shards."""
+    def save(self, step: int, tree: Any, *,
+             meta: Optional[dict] = None) -> str:
+        """Synchronous atomic save of this host's shards.
+
+        ``meta`` is a small JSON-able dict stored in the latest-step
+        pointer (e.g. the mesh topology the state was trained on) so a
+        restart can compare the saved topology against the current one
+        before re-placing the restored arrays — the remesh-resume
+        contract (see :func:`repro.train.fault.elastic_remesh`).
+        """
         t0 = time.perf_counter()
         tmp = os.path.join(self.directory, f".tmp_step_{step:010d}_h{self.host_id}")
         final = self._step_dir(step)
@@ -76,21 +84,22 @@ class CheckpointManager:
         manifest_tmp = os.path.join(
             self.directory, f".{MANIFEST}.h{self.host_id}.tmp")
         with open(manifest_tmp, "w") as f:
-            json.dump({"latest_step": step}, f)
+            json.dump({"latest_step": step, "meta": dict(meta or {})}, f)
         os.replace(manifest_tmp, os.path.join(self.directory, MANIFEST))
         self._gc()
         self.stats["saves"] += 1
         self.stats["save_seconds"] += time.perf_counter() - t0
         return final
 
-    def save_async(self, step: int, tree: Any) -> None:
+    def save_async(self, step: int, tree: Any, *,
+                   meta: Optional[dict] = None) -> None:
         """Snapshot to host memory now; write to disk in the background."""
         self.wait()  # one in-flight save at a time
         snapshot = jax.tree.map(lambda x: np.asarray(x).copy(), tree)
 
         def worker():
             try:
-                self.save(step, snapshot)
+                self.save(step, snapshot, meta=meta)
             except BaseException as e:  # surfaced on next wait()
                 self._error = e
 
@@ -112,6 +121,14 @@ class CheckpointManager:
             return None
         with open(path) as f:
             return int(json.load(f)["latest_step"])
+
+    def latest_meta(self) -> dict:
+        """The ``meta`` dict saved with the latest checkpoint ({} if none)."""
+        path = os.path.join(self.directory, MANIFEST)
+        if not os.path.exists(path):
+            return {}
+        with open(path) as f:
+            return dict(json.load(f).get("meta") or {})
 
     def restore(self, step: int, like: Any) -> Any:
         """Restore a pytree saved by this host, shaped like ``like``."""

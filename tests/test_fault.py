@@ -1,0 +1,231 @@
+"""repro.train.fault: lease server invariants, commit-vs-reap races,
+first-commit-wins dedup, bounded straggler policy, elastic remesh."""
+
+import numpy as np
+import pytest
+
+from repro.train.fault import (
+    FaultStats,
+    ShardServer,
+    StragglerPolicy,
+    elastic_remesh,
+)
+
+
+def assert_partition(srv):
+    """The lease invariant: done/pending/leased partition the shard space."""
+    completed, pending, leased = srv.counts()
+    assert completed + pending + leased == srv.n_shards
+
+
+# ------------------------------------------------------- commit-vs-reap races
+def test_acquire_skips_done_after_late_commit():
+    """Regression: a shard reaped back into pending and then committed late
+    by the original holder must never be handed out again (the seed's
+    double-processing bug: acquire did not check the done set)."""
+    srv = ShardServer(2, lease_timeout=1.0)
+    s0 = srv.acquire("w0", now=0.0)
+    assert s0 == 0
+    # lease expires; reap returns it to pending
+    assert srv.reap(now=5.0) == [s0]
+    assert_partition(srv)
+    # the original holder was merely slow, not dead: first commit wins
+    assert srv.commit("w0", s0, now=6.0)
+    # the reissued copy in pending must NOT be acquirable again
+    assert srv.acquire("w1", now=7.0) == 1
+    assert srv.acquire("w2", now=7.0) is None
+    assert srv.commit("w1", 1, now=8.0)
+    assert srv.done()
+    assert srv.stats.completed == 2
+    assert_partition(srv)
+
+
+def test_commit_vs_reap_race_first_commit_wins():
+    """Reap hands the shard to w1; whichever commits first wins, the loser
+    is rejected and the shard is completed exactly once."""
+    srv = ShardServer(1, lease_timeout=1.0)
+    s = srv.acquire("w0", now=0.0)
+    s2 = srv.acquire("w1", now=5.0)  # acquire reaps w0's expired lease
+    assert s2 == s
+    assert srv.stats.reissued == 1 and srv.stats.leases_reaped == 1
+    assert srv.commit("w1", s, now=6.0)       # winner
+    assert not srv.commit("w0", s, now=6.1)   # loser discards its copy
+    assert srv.stats.completed == 1
+    assert srv.stats.commits_rejected == 1
+    assert srv.done()
+    assert_partition(srv)
+
+
+def test_reap_latency_accounting():
+    srv = ShardServer(1, lease_timeout=1.0)
+    srv.acquire("w0", now=0.0)
+    assert srv.reap(now=3.5) == [0]
+    assert srv.stats.leases_reaped == 1
+    # expiry was at t=1.0, noticed at t=3.5 -> 2.5s detection lag
+    assert srv.stats.reap_latency_seconds == pytest.approx(2.5)
+    assert srv.stats.reap_latency_mean == pytest.approx(2.5)
+
+
+def test_heartbeat_of_committed_or_reaped_shard_is_false():
+    srv = ShardServer(2, lease_timeout=1.0)
+    s = srv.acquire("w0", now=0.0)
+    assert srv.heartbeat("w0", s, now=0.5)
+    srv.reap(now=9.0)
+    assert not srv.heartbeat("w0", s, now=9.1)  # lease gone
+    s2 = srv.acquire("w1", now=9.2)
+    assert s2 == s
+    srv.commit("w1", s2, now=9.5)
+    assert not srv.heartbeat("w1", s2, now=9.6)  # shard done
+
+
+# ------------------------------------------------------------- backup tasks
+def test_straggler_backup_first_commit_wins():
+    srv = ShardServer(4, lease_timeout=100.0,
+                      straggler=StragglerPolicy(factor=2.0, min_samples=2))
+    # two fast shards establish the duration baseline (p50 = 1.0s)
+    for _ in range(2):
+        sid = srv.acquire("fast", now=0.0)
+        assert srv.commit("fast", sid, now=1.0)
+    slow = srv.acquire("slow", now=1.0)
+    # not yet a straggler at 1.5x p50
+    assert srv.issue_backups(now=2.5) == []
+    # beyond p50 x factor: duplicate-issued exactly once
+    assert srv.issue_backups(now=4.0) == [slow]
+    assert srv.issue_backups(now=5.0) == []  # no double backup
+    assert srv.stats.backup_issued == 1
+    # the slow worker itself cannot pick up its own backup
+    assert srv.acquire("slow", now=5.0) == 3  # next pending, not the backup
+    backup_sid = srv.acquire("helper", now=5.0)
+    assert backup_sid == slow
+    assert srv.commit("helper", backup_sid, now=5.5)
+    assert srv.stats.backup_wins == 1
+    assert not srv.commit("slow", slow, now=6.0)  # original loses
+    assert srv.stats.commits_rejected == 1
+    assert_partition(srv)
+
+
+def test_backup_queue_skips_shards_finished_meanwhile():
+    srv = ShardServer(2, lease_timeout=100.0,
+                      straggler=StragglerPolicy(factor=1.0, min_samples=1))
+    s0 = srv.acquire("w0", now=0.0)
+    srv.commit("w0", s0, now=0.1)  # baseline p50 = 0.1
+    s1 = srv.acquire("w0", now=0.2)
+    assert srv.issue_backups(now=10.0) == [s1]
+    srv.commit("w0", s1, now=10.5)  # original finishes before backup starts
+    # stale backup entry must not be handed out for a done shard
+    assert srv.acquire("w1", now=11.0) is None
+    assert srv.done()
+
+
+# -------------------------------------------------------------- fail_worker
+def test_fail_worker_returns_all_leases_immediately():
+    srv = ShardServer(3, lease_timeout=1000.0)
+    a = srv.acquire("w0")
+    b = srv.acquire("w0")
+    assert srv.fail_worker("w0") == 2
+    assert srv.stats.failed_workers == 1
+    assert srv.stats.reissued == 2
+    got = {srv.acquire("w1"), srv.acquire("w1"), srv.acquire("w1")}
+    assert got == {a, b, 2}
+    assert_partition(srv)
+
+
+def test_fail_worker_keeps_other_workers_leases():
+    srv = ShardServer(2, lease_timeout=1000.0,
+                      straggler=StragglerPolicy(factor=1.0, min_samples=1))
+    s0 = srv.acquire("w0", now=0.0)
+    srv.commit("w0", s0, now=0.1)
+    s1 = srv.acquire("w0", now=0.2)
+    srv.issue_backups(now=50.0)
+    assert srv.acquire("w1", now=50.0) == s1  # backup lease on same shard
+    # the backup worker dies; the original lease survives -> no reissue
+    assert srv.fail_worker("w1") == 1
+    assert srv.stats.reissued == 0
+    assert srv.commit("w0", s1, now=51.0)
+    assert srv.done()
+
+
+# -------------------------------------------------------------- stats tier
+def test_fault_stats_as_metrics_flat_numeric():
+    srv = ShardServer(1, lease_timeout=1.0)
+    srv.acquire("w0", now=0.0)
+    srv.reap(now=3.0)
+    m = srv.stats.as_metrics()
+    assert m["reissued"] == 1 and m["leases_reaped"] == 1
+    assert "reap_latency_mean" in m  # derived property harvested
+    assert all(isinstance(v, (int, float)) for v in m.values())
+    assert isinstance(FaultStats().summary(), str)
+
+
+def test_record_retry_and_respawn_counters():
+    srv = ShardServer(1)
+    srv.record_retry()
+    srv.record_retry()
+    srv.record_respawn()
+    assert srv.stats.retries == 2 and srv.stats.respawned == 1
+
+
+# --------------------------------------------------------- straggler policy
+def test_straggler_policy_window_is_bounded():
+    p = StragglerPolicy(factor=3.0, min_samples=5, window=64)
+    for d in np.random.default_rng(0).uniform(0.1, 2.0, 1000):
+        p.record(float(d))
+    assert p.n_samples == 64  # rolling window, not full history
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_straggler_policy_p50_matches_numpy_median(seed):
+    """The incrementally maintained p50 must equal np.median of the
+    window contents after every record (insert + evict correctness)."""
+    rng = np.random.default_rng(seed)
+    p = StragglerPolicy(factor=3.0, min_samples=1, window=16)
+    window = []
+    for d in rng.uniform(0.0, 10.0, 200):
+        p.record(float(d))
+        window.append(float(d))
+        window = window[-16:]
+        assert p.p50 == pytest.approx(float(np.median(window)))
+
+
+def test_straggler_policy_should_backup_threshold():
+    p = StragglerPolicy(factor=3.0, min_samples=3)
+    for d in (1.0, 1.1, 0.9):
+        p.record(d)
+    assert not p.should_backup(2.0)
+    assert p.should_backup(3.5)
+    # below min_samples: never trigger
+    q = StragglerPolicy(factor=3.0, min_samples=5)
+    q.record(0.001)
+    assert not q.should_backup(1e9)
+
+
+def test_straggler_policy_validation():
+    with pytest.raises(ValueError):
+        StragglerPolicy(factor=0.0)
+    with pytest.raises(ValueError):
+        StragglerPolicy(min_samples=0)
+    with pytest.raises(ValueError):
+        StragglerPolicy(min_samples=10, window=5)
+
+
+# ------------------------------------------------------------ elastic remesh
+def test_elastic_remesh_two_axis_and_pods():
+    shape, axes, used = elastic_remesh(8, model_parallel=1, pod_size=4)
+    assert shape == (2, 4, 1) and axes == ("pod", "data", "model")
+    assert used == 8
+    shape, axes, used = elastic_remesh(4, model_parallel=1, pod_size=4)
+    # one pod's worth is not enough for a pod axis -> flat (data, model)
+    assert shape == (4, 1) and axes == ("data", "model") and used == 4
+
+
+def test_shard_server_validation():
+    with pytest.raises(ValueError):
+        ShardServer(-1)
+    with pytest.raises(ValueError):
+        ShardServer(1, lease_timeout=0.0)
+    srv = ShardServer(0)
+    assert srv.done() and srv.acquire("w") is None
+    # out-of-range commit is rejected, not crashed
+    srv2 = ShardServer(2)
+    assert not srv2.commit("w", 99)
+    assert srv2.stats.commits_rejected == 1

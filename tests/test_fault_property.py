@@ -1,0 +1,96 @@
+"""Property test: lease-server invariants under randomized schedules.
+
+Hypothesis drives arbitrary interleavings of acquire / heartbeat / commit /
+fail_worker / reap / issue_backups with synthetic clocks and asserts the
+two contracts the loader's exactly-once yield rests on:
+
+* every shard is committed exactly once (first commit wins, later commits
+  rejected), and the run always terminates with all shards done;
+* ``completed + pending + leased == n_shards`` after every operation (the
+  shard-state partition invariant).
+"""
+
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
+
+from repro.train.fault import ShardServer, StragglerPolicy  # noqa: E402
+
+WORKERS = ("w0", "w1", "w2")
+
+ops = st.lists(
+    st.one_of(
+        st.tuples(st.just("acquire"), st.sampled_from(WORKERS)),
+        st.tuples(st.just("commit"), st.sampled_from(WORKERS)),
+        st.tuples(st.just("heartbeat"), st.sampled_from(WORKERS)),
+        st.tuples(st.just("fail"), st.sampled_from(WORKERS)),
+        st.tuples(st.just("reap"), st.just("")),
+        st.tuples(st.just("backups"), st.just("")),
+        st.tuples(st.just("tick"), st.floats(min_value=0.0, max_value=5.0,
+                                             allow_nan=False)),
+    ),
+    min_size=1, max_size=120,
+)
+
+
+@hypothesis.settings(max_examples=120, deadline=None)
+@hypothesis.given(n_shards=st.integers(min_value=1, max_value=8),
+                  schedule=ops,
+                  lease_timeout=st.sampled_from([0.5, 2.0, 100.0]))
+def test_schedule_preserves_lease_invariants(n_shards, schedule,
+                                             lease_timeout):
+    srv = ShardServer(n_shards, lease_timeout=lease_timeout,
+                      straggler=StragglerPolicy(factor=2.0, min_samples=1))
+    now = 0.0
+    held = {w: [] for w in WORKERS}  # shards each worker believes it holds
+    committed = set()
+
+    def check():
+        completed, pending, leased = srv.counts()
+        assert completed + pending + leased == n_shards
+        assert completed == len(committed) == srv.stats.completed
+
+    for op, arg in schedule:
+        now += 0.01  # strictly advancing clock
+        if op == "tick":
+            now += arg
+        elif op == "acquire":
+            sid = srv.acquire(arg, now=now)
+            if sid is not None:
+                assert sid not in committed  # never re-issue a done shard
+                held[arg].append(sid)
+        elif op == "commit" and held[arg]:
+            sid = held[arg].pop(0)
+            ok = srv.commit(arg, sid, now=now)
+            # first commit accepted, any duplicate rejected — exactly once
+            assert ok == (sid not in committed)
+            committed.add(sid)
+        elif op == "heartbeat":
+            for sid in held[arg]:
+                srv.heartbeat(arg, sid, now=now)
+        elif op == "fail":
+            srv.fail_worker(arg)
+            held[arg].clear()
+        elif op == "reap":
+            srv.reap(now=now)
+        elif op == "backups":
+            srv.issue_backups(now=now)
+        check()
+
+    # drain: one surviving worker finishes whatever is left; termination
+    # plus exactly-once must hold no matter what the schedule did above
+    for _ in range(4 * n_shards + 4):
+        if srv.done():
+            break
+        now += lease_timeout + 1.0  # let stale leases expire
+        sid = srv.acquire("w0", now=now)
+        if sid is None:
+            continue
+        assert sid not in committed
+        assert srv.commit("w0", sid, now=now)
+        committed.add(sid)
+        check()
+    assert srv.done()
+    assert committed == set(range(n_shards))
+    assert srv.stats.completed == n_shards

@@ -82,7 +82,7 @@ def test_shard_server_reissues_on_timeout():
     # worker dies silently; lease expires
     s0b = srv.acquire("w1", now=10.0)
     assert s0b == s0
-    assert srv.stats["reissued"] == 1
+    assert srv.stats.reissued == 1
     assert srv.commit("w1", s0b)
     # zombie's late commit is rejected
     assert not srv.commit("dead", s0)
@@ -94,7 +94,7 @@ def test_shard_server_explicit_failure():
     b = srv.acquire("w0")
     lost = srv.fail_worker("w0")
     assert lost == 2
-    assert srv.stats["failed_workers"] == 1
+    assert srv.stats.failed_workers == 1
     # shards come back for others
     assert srv.acquire("w1") in (a, b)
 
